@@ -1,0 +1,57 @@
+"""Benchmark entry point: one bench per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Order: static/cheap first (comm complexity, roofline), then the measured
+CNN benches (convergence, k-sensitivity, breakdown, throughput). Every
+bench writes JSON under experiments/bench/ and prints its paper-claim
+check inline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer steps for the CNN benches")
+    args = ap.parse_args(argv)
+    steps = 15 if args.fast else 60
+
+    from benchmarks import (comm_complexity, convergence, k_sensitivity,
+                            roofline, throughput, time_breakdown)
+
+    benches = [
+        ("comm_complexity (Eq. 1)", lambda: comm_complexity.main()),
+        ("roofline single-pod", lambda: roofline.main(["--mesh", "single"])),
+        ("roofline multi-pod", lambda: roofline.main(["--mesh", "multi"])),
+        ("time_breakdown (Figs. 4-5)", lambda: time_breakdown.main()),
+        ("throughput (Table II)", lambda: throughput.main()),
+        ("convergence (Figs. 2-3)",
+         lambda: convergence.main(steps=steps)),
+        ("k_sensitivity (Figs. 6-7)",
+         lambda: k_sensitivity.main(steps=steps)),
+    ]
+    failures = []
+    for name, fn in benches:
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"--- {name}: ok in {time.time() - t0:.1f}s")
+        except Exception:
+            failures.append(name)
+            print(f"--- {name}: FAILED\n{traceback.format_exc()}")
+    if failures:
+        print(f"\n{len(failures)} benches failed: {failures}")
+        return 1
+    print("\nall benches ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,65 @@
+"""Paper Table II: system training throughput (images/s) on a 4-worker
+1 GbE cluster, and the speedup ratios g/k (vs gTop-k) and g/s (vs
+Sketched-SGD).
+
+Throughput = global_batch / (t_compu + t_compr + t_commu). Two columns:
+'measured' uses this host's CPU wall times for compute/compress (honest
+but CPU-skewed — a CPU runs the O(d) sketch encode ~1000x slower than an
+accelerator memory system); 'accel' prices compute/compress for an
+accelerator (see time_breakdown.py) — that column is the apples-to-apples
+reproduction of the paper's GPU Table II. Communication is the paper's
+Eq. 1 at 1 GbE in both.
+
+Paper's numbers: g/k = 1.3x (ResNet-20) / 3.1x (VGG-16), g/s = 1.1-1.2x.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.time_breakdown import breakdown
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+GLOBAL_BATCH = 32
+
+
+def main() -> dict:
+    results = {}
+    for model in ("resnet20", "vgg16"):
+        width_kw = None  # FULL-size models: the paper's own Table II scale
+        per = {}
+        for method in ("gtopk", "sketched-sgd", "gs-sgd"):
+            r = breakdown(model, method, width_kw=width_kw)
+            t_meas = r["t_compu"] + r["t_compr"] + r["t_commu"]
+            t_model = r["t_compu_model"] + r["t_compr_model"] + r["t_commu"]
+            per[method] = {"img_per_s": GLOBAL_BATCH / t_meas,
+                           "img_per_s_accel": GLOBAL_BATCH / t_model, **r}
+        for col in ("img_per_s", "img_per_s_accel"):
+            gk = per["gs-sgd"][col] / per["gtopk"][col]
+            gs = per["gs-sgd"][col] / per["sketched-sgd"][col]
+            per[f"speedup_vs_gtopk_{col}"] = gk
+            per[f"speedup_vs_sketched_{col}"] = gs
+        results[model] = per
+        print(f"{model:9s} accel-modeled: "
+              f"gtopk {per['gtopk']['img_per_s_accel']:7.1f}  "
+              f"sketched {per['sketched-sgd']['img_per_s_accel']:7.1f}  "
+              f"gs-sgd {per['gs-sgd']['img_per_s_accel']:7.1f}  "
+              f"g/k {per['speedup_vs_gtopk_img_per_s_accel']:.2f}x  "
+              f"g/s {per['speedup_vs_sketched_img_per_s_accel']:.2f}x  "
+              f"(paper: g/k 1.3-3.1x, g/s 1.1-1.2x)")
+        print(f"{'':9s} measured-CPU:  "
+              f"gtopk {per['gtopk']['img_per_s']:7.1f}  "
+              f"sketched {per['sketched-sgd']['img_per_s']:7.1f}  "
+              f"gs-sgd {per['gs-sgd']['img_per_s']:7.1f}  "
+              f"g/k {per['speedup_vs_gtopk_img_per_s']:.2f}x  "
+              f"g/s {per['speedup_vs_sketched_img_per_s']:.2f}x")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "throughput.json"), "w") as f:
+        json.dump(results, f)
+    return results
+
+
+if __name__ == "__main__":
+    main()

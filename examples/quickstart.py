@@ -1,0 +1,73 @@
+"""Quickstart: the gs-SGD pieces in 60 seconds (CPU).
+
+1. Count-Sketch a gradient, merge sketches from 4 workers by addition,
+   recover the global top-k with HEAVYMIX — no coordinates on the wire.
+2. Run 10 steps of actual distributed training (4 simulated workers,
+   collective-exact) with gs-SGD compressing the gradient exchange.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKES
+from repro.core import count_sketch as cs
+from repro.core import heavymix as hm
+from repro.core.gs_sgd import MeshAxes, make_state, make_train_step
+from repro.models.flatten import init_flat_params
+from repro.optim import make as make_opt
+
+
+def part1_sketch_and_recover():
+    print("=== 1. sketch -> merge -> HEAVYMIX ===")
+    d, k, P = 100_000, 16, 4
+    cfg = cs.SketchConfig(rows=5, width=4096, seed=0)
+
+    # a gradient with 16 planted heavy coordinates, split across 4 workers
+    key = jax.random.PRNGKey(0)
+    g = 0.01 * jax.random.normal(key, (d,))
+    hot = jax.random.choice(jax.random.fold_in(key, 1), d, (k,),
+                            replace=False)
+    g = g.at[hot].set(5.0)
+    parts = jnp.stack([g / P] * P)  # each worker holds 1/P of the gradient
+
+    sketches = [cs.encode(cfg, p) for p in parts]       # local compress
+    summed = cs.merge(*sketches)                        # linear merge!
+    idx, est = hm.heavymix(cfg, summed, k, d)           # global top-k
+    found = set(map(int, idx)) & set(map(int, hot))
+    print(f"  sketch: {d} floats -> {cfg.rows}x{cfg.width} "
+          f"({cfg.size / d:.1%} of d)")
+    print(f"  recovered {len(found)}/{k} planted heavy coords, "
+          f"est[0] = {float(est[0]):.2f} (true 5.00)")
+
+
+def part2_distributed_training():
+    print("=== 2. 4-worker gs-SGD training (vmap sim, collective-exact) ===")
+    cfg = SMOKES["qwen3-4b"]
+    P = 4
+    ma = MeshAxes(tp=1, data=P, tp_axis=None, data_axis="data")
+    opt = make_opt("adamw", lr=2e-3)
+    ts = make_train_step(cfg, ma, opt, dp_mode="dp", compressor_name="gs-sgd",
+                         compressor_kw=dict(k=4096, rows=5, width=8192),
+                         remat=False, dtype=jnp.float32)
+    params = init_flat_params(cfg, jax.random.PRNGKey(0), 1, ts.fs)
+    state = make_state(params, opt, ts.compressor, ts.d_local)
+    state = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (P,) + a.shape), state)
+    step = jax.jit(jax.vmap(ts.fn, axis_name="data"))
+    for i in range(10):
+        toks = jax.random.randint(jax.random.PRNGKey(i), (P, 2, 32), 0,
+                                  cfg.vocab_size)
+        state, m = step(state, {"tokens": toks, "labels": toks})
+        if i % 3 == 0:
+            print(f"  step {i}: loss {float(m['loss'][0]):.4f}")
+    sync = max(float(jnp.max(jnp.abs(v - v[0:1])))
+               for v in state["params"].values())
+    print(f"  replica divergence after 10 compressed steps: {sync:.1e} "
+          "(bit-exact)")
+
+
+if __name__ == "__main__":
+    part1_sketch_and_recover()
+    part2_distributed_training()

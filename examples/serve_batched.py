@@ -1,0 +1,55 @@
+"""Batched serving demo: prefill a prompt batch, then greedy-decode.
+
+Uses the zamba2 (Mamba2 + shared-attention hybrid) smoke config to show
+the mixed cache (SSM states + KV cache) flowing through the same
+prefill/decode steps the decode_32k / long_500k dry-run cells lower.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKES
+from repro.models.common import ShardCtx
+from repro.models.flatten import init_flat_params, make_flat_spec
+from repro.models.model import decode_fn, init_cache, prefill_fn
+
+CFG = SMOKES["zamba2-2.7b"]
+B, PROMPT, GEN = 4, 24, 12
+
+
+def main():
+    ctx = ShardCtx(tp=1, tp_axis=None, dtype=jnp.float32)
+    fs = make_flat_spec(CFG, 1)
+    segs = init_flat_params(CFG, jax.random.PRNGKey(0), 1, fs)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0,
+                                 CFG.vocab_size)
+    cache = init_cache(CFG, ctx, B, PROMPT + GEN, jnp.float32)
+    n_leaves = len(jax.tree_util.tree_leaves(cache))
+    print(f"arch {CFG.name}: cycle={CFG.cycle}, cache pytree has "
+          f"{n_leaves} leaves (SSM states + shared-attn KV)")
+
+    prefill = jax.jit(lambda p, b, c: prefill_fn(CFG, ctx, fs, p, b, c))
+    decode = jax.jit(lambda p, t, kl, c: decode_fn(CFG, ctx, fs, p, t, kl, c))
+
+    t0 = time.time()
+    logits, cache = prefill(segs, {"tokens": prompts}, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(GEN - 1):
+        tok, cache = decode(segs, tok[:, None], jnp.int32(PROMPT + i), cache)
+        out.append(tok)
+    gen = jnp.stack(out, 1)
+    dt = time.time() - t0
+    print(f"prefilled {B}x{PROMPT} and decoded {GEN} tokens/seq "
+          f"in {dt:.2f}s ({B * GEN / dt:.1f} tok/s incl. compile)")
+    for b in range(B):
+        print(f"  seq {b}: ...{prompts[b, -4:].tolist()} => "
+              f"{gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

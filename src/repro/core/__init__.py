@@ -1,0 +1,10 @@
+from repro.core import allreduce, compression, count_sketch, error_feedback, heavymix
+from repro.core.compression import (CommStats, DenseAllReduce, GTopK, GsSGD,
+                                    SketchedSGD, TopKCompressor, make)
+from repro.core.count_sketch import SketchConfig
+
+__all__ = [
+    "allreduce", "compression", "count_sketch", "error_feedback", "heavymix",
+    "CommStats", "DenseAllReduce", "GTopK", "GsSGD", "SketchedSGD",
+    "TopKCompressor", "make", "SketchConfig",
+]

@@ -1,0 +1,112 @@
+"""All-reduce schedules for sketch aggregation.
+
+Two interchangeable (numerically identical, sketches are linear) paths:
+
+* ``tree_allreduce`` — the paper's Algorithm 1: recursive halving to a unique
+  root in ⌈log P⌉ rounds, then doubling back, 2⌈log P⌉ rounds total, with the
+  Fig. 1 "parking" rule for non-power-of-two P (the largest-id active node
+  skips an odd round). Emitted as static ``jax.lax.ppermute`` schedules inside
+  shard_map / vmap-with-axis-name — this is the faithful reproduction and the
+  path elastic (arbitrary-P) runs use.
+
+* ``psum_allreduce`` — ``jax.lax.psum``: on a TPU torus XLA lowers this to a
+  bandwidth-optimal bidirectional ring/tree per mesh axis. Production default.
+
+Both run under ``jax.vmap(..., axis_name=...)`` for CPU multi-worker
+simulation and under ``jax.shard_map`` on real meshes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+AxisNames = str | Sequence[str]
+
+
+def reduce_schedule(p: int) -> list[list[tuple[int, int]]]:
+    """Static (src, dst) pairs per round for recursive halving to rank 0.
+
+    Odd active counts park the largest-id node (paper Fig. 1b/1c); induction
+    gives a unique root (= rank 0) after <= ⌈log2 P⌉ rounds.
+    """
+    rounds: list[list[tuple[int, int]]] = []
+    active = list(range(p))
+    while len(active) > 1:
+        parked = [active[-1]] if len(active) % 2 == 1 else []
+        paired = active[: len(active) - len(parked)]
+        pairs = [(paired[i + 1], paired[i]) for i in range(0, len(paired), 2)]
+        rounds.append(pairs)
+        active = paired[::2] + parked
+    return rounds
+
+
+def _complete_perm(pairs: list[tuple[int, int]], p: int) -> list[tuple[int, int]]:
+    """Extend a partial (src, dst) map to a full permutation of range(p).
+
+    ``jax.lax.ppermute`` under ``vmap(axis_name=...)`` (our CPU worker
+    simulator) requires a bijection; idle ranks are wired to the leftover
+    destinations and their received garbage is masked out by the caller.
+    """
+    srcs = {s for s, _ in pairs}
+    dsts = {d for _, d in pairs}
+    free_src = [r for r in range(p) if r not in srcs]
+    free_dst = [r for r in range(p) if r not in dsts]
+    return pairs + list(zip(free_src, free_dst))
+
+
+def masked_permute(x: Array, axis_name: str, pairs: list[tuple[int, int]],
+                   p: int) -> tuple[Array, Array]:
+    """ppermute along real (src,dst) pairs; returns (received, is_receiver).
+
+    ``received`` is only meaningful where ``is_receiver`` — callers mask.
+    """
+    received = jax.lax.ppermute(x, axis_name, perm=_complete_perm(pairs, p))
+    rank = jax.lax.axis_index(axis_name)
+    dsts = [d for _, d in pairs]
+    mask = jnp.zeros((p,), jnp.bool_).at[jnp.asarray(dsts)].set(True)[rank]
+    return received, mask
+
+
+def tree_allreduce(x: Array, axis_name: str, p: int) -> Array:
+    """Paper Alg. 1 all-reduce of ``x`` over ``axis_name`` (size p)."""
+    if p == 1:
+        return x
+    sched = reduce_schedule(p)
+    # Reduce: receivers accumulate their pair partner's payload.
+    for pairs in sched:
+        received, mask = masked_permute(x, axis_name, pairs, p)
+        x = x + jnp.where(mask, received, jnp.zeros_like(received))
+    # Broadcast back down the same tree (reversed rounds, reversed edges).
+    for pairs in reversed(sched):
+        back = [(dst, src) for (src, dst) in pairs]
+        received, mask = masked_permute(x, axis_name, back, p)
+        x = jnp.where(mask, received, x)
+    return x
+
+
+def tree_allreduce_rounds(p: int) -> int:
+    """Communication rounds used by tree_allreduce = 2 * ceil(log2 P)."""
+    return 2 * max(1, math.ceil(math.log2(p))) if p > 1 else 0
+
+
+def psum_allreduce(x: Array, axis_names: AxisNames, p: int | None = None) -> Array:
+    return jax.lax.psum(x, axis_names)
+
+
+def allreduce(x: Array, axis_names: AxisNames, p: int, *, mode: str = "psum") -> Array:
+    """Dispatch: mode in {'psum', 'tree'}. 'tree' needs a single axis name."""
+    if mode == "psum":
+        return psum_allreduce(x, axis_names, p)
+    if mode == "tree":
+        if not isinstance(axis_names, str):
+            if len(axis_names) != 1:
+                raise ValueError("tree all-reduce runs over a single flat axis; "
+                                 f"got {axis_names}. Use mode='psum' for multi-axis.")
+            axis_names = axis_names[0]
+        return tree_allreduce(x, axis_names, p)
+    raise ValueError(f"unknown all-reduce mode {mode!r}")

@@ -1,0 +1,447 @@
+"""Gradient compressors: gs-SGD (the paper) and every baseline it compares to.
+
+All compressors share one contract so the training loop, the convergence
+benchmarks and the dry-run lowering treat them uniformly:
+
+    state              = compressor.init(d)
+    upd_sum, state, nfo = compressor.step(state, g_local, axis=..., nworkers=P)
+
+``g_local`` is this worker's (error-corrected input to) flat local gradient;
+``upd_sum`` is the dense SUM over workers of the applied update (caller
+divides by P). ``axis`` names the data-parallel mesh axes of the enclosing
+``jax.shard_map`` — or of a ``jax.vmap(..., axis_name=...)``, which is how the
+CPU convergence benchmarks simulate P workers with bit-identical collective
+semantics.
+
+Compressors:
+  DenseAllReduce   — vanilla synchronous S-SGD (no compression).
+  TopKCompressor   — local Top-k, PS-style aggregation (centralized baseline).
+  GTopK            — gTop-k [23]: tree-merged global Top-k (decentralized).
+  SketchedSGD      — Sketched-SGD [22]: Count-Sketch + parameter-server
+                     aggregation, emulated with all_gather => O(logd * P) comm.
+  GsSGD            — THE PAPER: Count-Sketch + decentralized all-reduce of
+                     sketches (psum or faithful Alg.1 ppermute tree) +
+                     HEAVYMIX + exact second round => O(logd * logP) comm.
+
+Every step returns a ``CommStats`` (static python numbers derived from shapes)
+consumed by the paper-figure benchmarks and the roofline model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import allreduce as ar
+from repro.core import count_sketch as cs
+from repro.core import error_feedback as ef
+from repro.core import heavymix as hm
+from repro.kernels import ops as kops
+
+Array = jax.Array
+AxisNames = str | Sequence[str]
+
+_F32 = 4  # wire bytes per float32
+_I32 = 4
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class CommStats:
+    """Per-worker communication volume of one aggregation step (static
+    python numbers — rides through jit/vmap as a static pytree leaf)."""
+
+    bytes_out: float  # payload bytes this worker injects into the network
+    rounds: int       # latency term: sequential communication rounds
+    label: str = ""
+
+    def time(self, alpha: float, beta: float) -> float:
+        """Paper Eq.1 cost model: rounds*alpha + bytes*beta."""
+        return self.rounds * alpha + self.bytes_out * beta
+
+
+def _ring_allreduce_bytes(nbytes: float, p: int) -> float:
+    """Bandwidth-optimal all-reduce: 2*(P-1)/P of the payload per worker."""
+    return 2.0 * (p - 1) / p * nbytes
+
+
+def _scatter(d: int, idx: Array, vals: Array) -> Array:
+    return jnp.zeros((d,), jnp.float32).at[idx].set(vals)
+
+
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class DenseAllReduce:
+    """No compression — the classic synchronous data-parallel baseline."""
+
+    name: str = "dense"
+
+    def init(self, d: int) -> Any:
+        return ()
+
+    def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        upd = jax.lax.psum(g.astype(jnp.float32), axis)
+        stats = CommStats(_ring_allreduce_bytes(g.size * _F32, nworkers),
+                          rounds=2 * (nworkers - 1), label=self.name)
+        return upd, state, stats
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Local Top-k with centralized (PS-style) aggregation + error feedback.
+
+    The PS inbox is emulated with a psum of the k-sparse local selections —
+    identical math, and the comm volume is modeled as the PS up/down link
+    (k values + k indices per worker, O(k*P) at the server hotspot).
+    """
+
+    k: int
+    name: str = "topk"
+
+    def init(self, d: int) -> Array:
+        return ef.init(d)
+
+    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        u = ef.add(acc, g)
+        d = u.shape[0]
+        _, idx = jax.lax.top_k(jnp.abs(u), self.k)
+        local = _scatter(d, idx, u[idx])
+        upd = jax.lax.psum(local, axis)
+        acc = ef.residual_dense(u, local)
+        stats = CommStats(2 * self.k * (_F32 + _I32), rounds=2, label=self.name)
+        return upd, acc, stats
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class GTopK:
+    """gTop-k [23]: decentralized tree merge keeping only k survivors per hop.
+
+    Each reduce round ships 2k numbers (values + coordinates — Top-k methods
+    must send coordinates, doubling the payload; the paper contrasts this
+    with sketches, which need none). The merged set is re-sparsified to k
+    after every hop, which is exactly the convergence-hurting approximation
+    gs-SGD removes.
+    """
+
+    k: int
+    name: str = "gtopk"
+
+    def init(self, d: int) -> Array:
+        return ef.init(d)
+
+    def _sparsify(self, x: Array) -> Array:
+        _, idx = jax.lax.top_k(jnp.abs(x), self.k)
+        return _scatter(x.shape[0], idx, x[idx])
+
+    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        if not isinstance(axis, str):
+            if len(axis) != 1:
+                raise ValueError("gTop-k tree needs a single flat DP axis")
+            axis = axis[0]
+        u = ef.add(acc, g)
+        s = self._sparsify(u)
+        sched = ar.reduce_schedule(nworkers)
+        for pairs in sched:  # recursive halving; merged set re-sparsified
+            received, mask = ar.masked_permute(s, axis, pairs, nworkers)
+            merged = s + jnp.where(mask, received, jnp.zeros_like(received))
+            s = jnp.where(mask, self._sparsify(merged), s)
+        for pairs in reversed(sched):  # broadcast the survivors back
+            back = [(dst, src) for (src, dst) in pairs]
+            received, mask = ar.masked_permute(s, axis, back, nworkers)
+            s = jnp.where(mask, received, s)
+        # EF: zero the globally surviving coordinates in u.
+        _, idx = jax.lax.top_k(jnp.abs(s), self.k)
+        acc = ef.residual_global(u, idx)
+        rounds = ar.tree_allreduce_rounds(nworkers)
+        stats = CommStats(rounds * self.k * (_F32 + _I32), rounds=rounds,
+                          label=self.name)
+        return s, acc, stats
+
+
+# ---------------------------------------------------------------------------
+# Sketch-based compressors (Sketched-SGD baseline + gs-SGD, the paper).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class _SketchBased:
+    k: int = 1024
+    sketch: cs.SketchConfig = cs.SketchConfig()
+    faithful_heavymix: bool = False
+    use_pallas: bool = False  # Pallas encode/decode (interpret on CPU)
+    encoder: str = "exact"    # 'exact' (multiply-shift) | 'ts' (O(d*R)
+    #   TPU-native shifted-window variant — beyond-paper, see ts_sketch.py)
+    name: str = "sketch-base"
+
+    def init(self, d: int) -> Array:
+        return ef.init(d)
+
+    def _ts_cfg(self, d: int):
+        from repro.core.ts_sketch import TSketchConfig
+        return TSketchConfig(d=d, rows=self.sketch.rows,
+                             width=self.sketch.width, seed=self.sketch.seed)
+
+    def _encode(self, u: Array) -> Array:
+        if self.encoder == "ts":
+            from repro.core import ts_sketch as ts
+            return ts.encode(self._ts_cfg(u.shape[0]), u)
+        return kops.encode(self.sketch, u, use_pallas=self.use_pallas or None)
+
+    def _recover(self, sketch_sum: Array, u: Array, d: int, *,
+                 axis: AxisNames, key: Array | None,
+                 include: Array | None = None, scale: Array | None = None):
+        """HEAVYMIX + exact second round. Returns (upd_sum, idx).
+
+        include/scale: straggler-drop support — this worker's exact values
+        join the second round only if ``include``; the sum is rescaled by
+        ``scale`` = P/live (unbiased estimate of the full-P sum).
+        """
+        est = None
+        if self.encoder == "ts":
+            from repro.core import ts_sketch as ts
+            est = ts.decode(self._ts_cfg(d), sketch_sum, d)
+        idx, _ = hm.heavymix(self.sketch, sketch_sum, self.k, d, key=key,
+                             faithful=self.faithful_heavymix, estimates=est)
+        # Second round (Alg.2 line 4): exact values of Top_k, k floats.
+        vals = u[idx] if include is None else u[idx] * include
+        vals = jax.lax.psum(vals, axis)
+        if scale is not None:
+            vals = vals * scale
+        return _scatter(d, idx, vals), idx
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class SketchedSGD(_SketchBased):
+    """Sketched-SGD [22]: PS aggregation of sketches — O(log d * P) comm.
+
+    TPU pods have no parameter server; the PS inbox (every worker's sketch
+    arriving at one place) is reproduced with all_gather so the per-worker
+    traffic keeps the O(S * P) scaling of the centralized original.
+    """
+
+    name: str = "sketched-sgd"
+
+    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        u = ef.add(acc, g)
+        d = u.shape[0]
+        sk = self._encode(u)
+        gathered = jax.lax.all_gather(sk, axis)  # (P, R, W) — the PS inbox
+        sk_sum = jnp.sum(gathered.reshape(-1, *sk.shape), axis=0)
+        upd, idx = self._recover(sk_sum, u, d, axis=axis, key=key)
+        acc = ef.residual_global(u, idx)
+        sk_bytes = self.sketch.size * _F32
+        stats = CommStats(sk_bytes * nworkers + self.k * _F32,
+                          rounds=nworkers, label=self.name)
+        return upd, acc, stats
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class GsSGD(_SketchBased):
+    """THE PAPER: global-sketching SGD.
+
+    Sketch locally, all-reduce the (linear, mergeable) sketches
+    decentralized, recover Top-k via HEAVYMIX from the identical summed
+    sketch on every worker, fetch exact values with a k-float second round.
+    Comm: O(log d) payload * O(log P) rounds (tree) — no coordinates ever
+    cross the wire.
+
+    allreduce_mode: 'psum' (TPU-native, production) | 'tree' (faithful Alg.1).
+    wire_dtype:     sketch dtype on the wire; bf16 halves collective bytes
+                    (beyond-paper knob, validated for estimate error in tests).
+    """
+
+    allreduce_mode: str = "psum"
+    wire_dtype: Any = jnp.float32
+    name: str = "gs-sgd"
+
+    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None, include: Array | None = None):
+        """include: () bool — straggler drop-mask (True = my sketch counts).
+
+        When a worker is excluded its sketch contributes zero (linearity
+        makes the merged sketch exact for the live subset), the sum is
+        rescaled by P/live, and the excluded worker keeps its FULL update
+        in the error-feedback accumulator for the next step.
+        """
+        u = ef.add(acc, g)
+        d = u.shape[0]
+        sk = self._encode(u).astype(self.wire_dtype)
+        scale = None
+        if include is not None:
+            include = include.astype(jnp.float32)
+            live = jax.lax.psum(include, axis)
+            scale = nworkers / jnp.maximum(live, 1.0)
+            sk = sk * include.astype(sk.dtype)
+        sk_sum = ar.allreduce(sk, axis, nworkers,
+                              mode=self.allreduce_mode).astype(jnp.float32)
+        upd, idx = self._recover(sk_sum, u, d, axis=axis, key=key,
+                                 include=include, scale=scale)
+        if include is None:
+            acc = ef.residual_global(u, idx)
+        else:  # dropped workers keep their entire update for next step
+            acc = jnp.where(include > 0, ef.residual_global(u, idx), u)
+        wire = jnp.dtype(self.wire_dtype).itemsize
+        if self.allreduce_mode == "tree":
+            rounds = ar.tree_allreduce_rounds(nworkers)
+            sk_bytes = rounds * self.sketch.size * wire
+        else:
+            rounds = 2 * (nworkers - 1)
+            sk_bytes = _ring_allreduce_bytes(self.sketch.size * wire, nworkers)
+        stats = CommStats(sk_bytes + self.k * _F32, rounds=rounds + 2,
+                          label=self.name)
+        return upd, acc, stats
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class FetchSGDStyle(_SketchBased):
+    """Sketch-space EF + momentum (FetchSGD [36], which the paper cites for
+    "momentum and error accumulation can be carried out within the data
+    structure").
+
+    State is TWO sketches (momentum + error), O(R*W) — independent of d.
+    This is the memory-free alternative to gs-SGD's O(d) error-feedback
+    accumulator (relevant at 235B params where the EF vector is GBs; see
+    DESIGN.md §4). No exact second round: applied values come from the
+    sketch estimates, and the error sketch subtracts the *applied* update
+    (linearity), keeping the bookkeeping exact in sketch space.
+
+    Momentum lives in the sketch — run under an optimizer WITHOUT its own
+    momentum (e.g. sgdm(momentum=0)).
+    """
+
+    momentum: float = 0.9
+    name: str = "fetchsgd"
+
+    def init(self, d: int):
+        z = jnp.zeros((self.sketch.rows, self.sketch.width), jnp.float32)
+        return (z, z)  # (momentum sketch, error sketch)
+
+    def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        s_m, s_e = state
+        d = g.shape[0]
+        sk = jax.lax.psum(self._encode(g), axis)       # merged grad sketch
+        s_m = self.momentum * s_m + sk                 # momentum in-sketch
+        s_e = s_e + s_m                                # error accumulation
+        idx, est = hm.heavymix(self.sketch, s_e, self.k, d, key=key)
+        upd = _scatter(d, idx, est)
+        s_e = s_e - self._encode(upd)                  # subtract applied
+        stats = CommStats(
+            _ring_allreduce_bytes(self.sketch.size * _F32, nworkers),
+            rounds=2 * (nworkers - 1), label=self.name)
+        return upd, (s_m, s_e), stats
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class SignSGD:
+    """1-bit SGD with error feedback (paper Sec. II related work [30][31]).
+
+    Transmits sign(u) plus one scale (mean |u|) per worker; EF keeps the
+    quantization residual. Wire: d/8 bytes + 4 — the quantization-family
+    baseline the paper contrasts sparsification against (<=32x max ratio).
+    """
+
+    name: str = "signsgd"
+
+    def init(self, d: int) -> Array:
+        return ef.init(d)
+
+    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        u = ef.add(acc, g)
+        scale = jnp.mean(jnp.abs(u))
+        local = jnp.sign(u) * scale
+        upd = jax.lax.psum(local, axis)
+        acc = ef.residual_dense(u, local)
+        stats = CommStats(
+            _ring_allreduce_bytes(g.size / 8 + _F32, nworkers),
+            rounds=2 * (nworkers - 1), label=self.name)
+        return upd, acc, stats
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class PowerSGD:
+    """Rank-r low-rank compression with EF (paper Sec. II [27]).
+
+    The flat gradient is matricized to a near-square (m, d/m) view and
+    compressed with one power iteration (P = M Q, orthonormalize after a
+    psum, Q' = M^T P̂) — two small all-reduces of r*(m+n) floats. Our flat
+    layout matricizes the whole model at once (documented simplification
+    of the per-layer original; the rank-r subspace spans layers).
+    """
+
+    rank: int = 4
+    seed: int = 0
+    name: str = "powersgd"
+
+    def init(self, d: int):
+        m = 1 << ((d - 1).bit_length() + 1) // 2       # near-square split
+        n = (d + m - 1) // m
+        q = jax.random.normal(jax.random.PRNGKey(self.seed), (n, self.rank),
+                              jnp.float32)
+        return (ef.init(d), q)
+
+    def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None):
+        acc, q = state
+        u = ef.add(acc, g)
+        d = u.shape[0]
+        n = q.shape[0]
+        m = (d + n - 1) // n
+        mat = jnp.pad(u, (0, m * n - d)).reshape(m, n)
+        p = jax.lax.psum(mat @ q, axis)                # (m, r)
+        p, _ = jnp.linalg.qr(p)                        # orthonormal basis
+        q_new = jax.lax.psum(mat.T @ p, axis)          # (n, r)
+        approx = (p @ q_new.T).reshape(-1)[:d]         # rank-r of the SUM
+        # EF: each worker's applied share is ITS projection p p^T M_w
+        # (these sum to ``approx`` — same bookkeeping exactness as gs-SGD)
+        local = (p @ (mat.T @ p).T).reshape(-1)[:d]
+        acc = ef.residual_dense(u, local)
+        stats = CommStats(
+            _ring_allreduce_bytes(self.rank * (m + n) * _F32, nworkers),
+            rounds=4 * (nworkers - 1), label=self.name)
+        return approx, (acc, q_new), stats
+
+
+REGISTRY = {
+    "dense": DenseAllReduce,
+    "topk": TopKCompressor,
+    "gtopk": GTopK,
+    "sketched-sgd": SketchedSGD,
+    "gs-sgd": GsSGD,
+    "fetchsgd": FetchSGDStyle,
+    "signsgd": SignSGD,
+    "powersgd": PowerSGD,
+}
+
+
+def make(name: str, **kw) -> Any:
+    """Build a compressor by name; sketch geometry via rows/width/seed kw."""
+    cls = REGISTRY[name]
+    if name in ("sketched-sgd", "gs-sgd", "fetchsgd"):
+        sk = cs.SketchConfig(rows=kw.pop("rows", 5),
+                             width=kw.pop("width", 16384),
+                             seed=kw.pop("seed", 0))
+        return cls(sketch=sk, **kw)
+    if name in ("dense", "signsgd", "powersgd"):
+        kw.pop("k", None)
+    return cls(**kw)

@@ -1,0 +1,207 @@
+"""Count-Sketch: the linear, mergeable gradient-compression structure of gs-SGD.
+
+A Count-Sketch of a vector ``g in R^d`` is an ``(R, W)`` table; row ``r``
+accumulates ``sign_r(i) * g[i]`` into bucket ``h_r(i)``. It is a *linear*
+map ``S(g) = C g`` (C is implicit), hence ``S(a + b) = S(a) + S(b)`` — the
+property gs-SGD exploits to merge sketches across workers with a plain
+all-reduce instead of exchanging length-d gradients.
+
+Hashing is branch-free multiply-shift (Dietzfelbinger): with ``W = 2^w``,
+
+    bucket_r(i) = (a_r * i + b_r) >> (32 - w)      (uint32 wrap-around)
+    sign_r(i)   = 1 - 2 * ((c_r * i + d_r) >> 31)
+
+Hash parameters are a pure function of ``(seed, rows)`` — NEVER of the worker
+rank — so every worker sketches into the same geometry and sums are exact.
+
+TPU adaptation (see DESIGN.md §3.1): encode/decode avoid scatter/gather; they
+are expressed as blocked signed one-hot matmuls that run on the MXU. The
+Pallas kernels in ``repro.kernels`` implement exactly this scheme; this module
+holds the structure, hashing, and pure-jnp paths used as oracles and on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (int(x) - 1)).bit_length()
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Static geometry of a Count-Sketch.
+
+    rows:  number of independent hash rows R (median-of-R estimates).
+    width: number of buckets per row W (rounded up to a power of two).
+    seed:  seed for the hash family; must be identical on all workers.
+    """
+
+    rows: int = 5
+    width: int = 16384
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "width", _next_pow2(self.width))
+
+    @property
+    def log2_width(self) -> int:
+        return int(self.width).bit_length() - 1
+
+    @property
+    def size(self) -> int:
+        return self.rows * self.width
+
+    @functools.cached_property
+    def hash_params(self) -> np.ndarray:
+        """(R, 4) uint32 multiply-shift parameters [a, b, c, d]; a, c odd."""
+        rng = np.random.RandomState(np.uint32(self.seed * 2654435761 % (2**31)))
+        p = rng.randint(0, 2**31, size=(self.rows, 4)).astype(np.uint64)
+        p = (p * 2 + rng.randint(0, 2**31, size=(self.rows, 4)).astype(np.uint64)) % (2**32)
+        p[:, 0] |= 1  # multiplier for bucket hash must be odd
+        p[:, 2] |= 1  # multiplier for sign hash must be odd
+        return p.astype(np.uint32)
+
+
+def hash_buckets(cfg: SketchConfig, idx: Array) -> tuple[Array, Array]:
+    """Bucket ids and signs for coordinate indices ``idx`` (any shape, int).
+
+    Returns (buckets, signs): buckets int32 (R, *idx.shape) in [0, W),
+    signs float32 (R, *idx.shape) in {-1, +1}.
+    """
+    p = jnp.asarray(cfg.hash_params)  # (R, 4) uint32
+    i = idx.astype(jnp.uint32)
+    a = p[:, 0].reshape((-1,) + (1,) * i.ndim)
+    b = p[:, 1].reshape((-1,) + (1,) * i.ndim)
+    c = p[:, 2].reshape((-1,) + (1,) * i.ndim)
+    d = p[:, 3].reshape((-1,) + (1,) * i.ndim)
+    shift = jnp.uint32(32 - cfg.log2_width)
+    buckets = ((a * i + b) >> shift).astype(jnp.int32)
+    signs = 1.0 - 2.0 * ((c * i + d) >> jnp.uint32(31)).astype(jnp.float32)
+    return buckets, signs
+
+
+_CHUNK = 1 << 20  # coords per scan step: keeps (R, chunk) transients ~20 MB
+
+
+def encode(cfg: SketchConfig, g: Array) -> Array:
+    """Sketch a vector: (d,) -> (R, W) float32. Pure-jnp path (oracle/CPU).
+
+    Chunked over coordinates so the (R, d) hash intermediates never
+    materialize (at d ~ 10^8+8 they would be multi-GB); the TPU production
+    path is the Pallas kernel in ``repro.kernels``.
+    """
+    g = g.reshape(-1).astype(jnp.float32)
+    d = g.shape[0]
+    if d <= _CHUNK:
+        buckets, signs = hash_buckets(cfg, jnp.arange(d))
+
+        def row(bk, sg):
+            return jnp.zeros((cfg.width,), jnp.float32).at[bk].add(sg * g)
+
+        return jax.vmap(row)(buckets, signs)
+
+    pad = (-d) % _CHUNK
+    gp = jnp.pad(g, (0, pad)).reshape(-1, _CHUNK)
+    n = gp.shape[0]
+
+    def body(acc, xs):
+        gc, i = xs
+        idx = jnp.arange(_CHUNK) + i * _CHUNK
+        buckets, signs = hash_buckets(cfg, idx)
+        valid = (idx < d).astype(jnp.float32)
+
+        def row(a, bk, sg):
+            return a.at[bk].add(sg * gc * valid)
+
+        return jax.vmap(row)(acc, buckets, signs), None
+
+    acc0 = jnp.zeros((cfg.rows, cfg.width), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (gp, jnp.arange(n)))
+    return acc
+
+
+def decode(cfg: SketchConfig, sketch: Array, d: int) -> Array:
+    """Estimate every coordinate of the sketched vector: (R, W) -> (d,).
+
+    The estimate for coordinate i is median over rows of
+    ``sign_r(i) * sketch[r, h_r(i)]`` with guarantee |est - g_i| <= eps*||g||2.
+    Chunked over coordinates (same reason as ``encode``).
+    """
+    sk = sketch.astype(jnp.float32)
+    if d <= _CHUNK:
+        buckets, signs = hash_buckets(cfg, jnp.arange(d))  # (R, d)
+        est = jnp.take_along_axis(sk, buckets, axis=1) * signs
+        return jnp.median(est, axis=0)
+
+    pad = (-d) % _CHUNK
+    n = (d + pad) // _CHUNK
+
+    def body(_, i):
+        idx = jnp.arange(_CHUNK) + i * _CHUNK
+        buckets, signs = hash_buckets(cfg, idx)
+        est = jnp.take_along_axis(sk, buckets, axis=1) * signs
+        return None, jnp.median(est, axis=0)
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(n))
+    return chunks.reshape(-1)[:d]
+
+
+def decode_at(cfg: SketchConfig, sketch: Array, idx: Array) -> Array:
+    """Estimate only the coordinates in ``idx``: -> (len(idx),)."""
+    buckets, signs = hash_buckets(cfg, idx)
+    est = jnp.take_along_axis(sketch.astype(jnp.float32), buckets, axis=1) * signs
+    return jnp.median(est, axis=0)
+
+
+def l2sq_estimate(sketch: Array) -> Array:
+    """Estimate ||g||^2 from the sketch: median over rows of ||row||^2.
+
+    Each row's squared norm is an unbiased estimator of ||g||^2 (cross terms
+    have zero expectation under the sign hash); median-of-R tightens it.
+    """
+    row_norms = jnp.sum(sketch.astype(jnp.float32) ** 2, axis=1)
+    return jnp.median(row_norms)
+
+
+def merge(*sketches: Array) -> Array:
+    """Merge sketches of different vectors: S(a)+S(b) = S(a+b) (linearity)."""
+    out = sketches[0]
+    for s in sketches[1:]:
+        out = out + s
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Convenience: sketch a pytree by raveling it into a single flat vector.
+# ---------------------------------------------------------------------------
+
+
+def ravel_tree(tree: Any) -> tuple[Array, Any]:
+    """Flatten a pytree of arrays into one f32 vector + static unravel info."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    treedef = jax.tree_util.tree_structure(tree)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    return flat, (treedef, shapes)
+
+
+def unravel_tree(flat: Array, info: Any) -> Any:
+    treedef, shapes = info
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off : off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)

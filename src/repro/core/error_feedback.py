@@ -1,0 +1,43 @@
+"""Error feedback for sparsified/sketched distributed SGD.
+
+All gs-SGD-family compressors are lossy: per step only k of d coordinates of
+the *global* gradient are applied. Convergence is preserved by keeping the
+unapplied remainder in a local accumulator that is re-added before the next
+compression (EF-SGD / memory-SGD; the paper inherits this from Sketched-SGD
+[22] where momentum & error "accumulate inside the sketch" by linearity).
+
+Global-selection semantics: with u_p = acc_p + g_p and a *globally* selected
+index set I (identical on every worker, since every worker recovers it from
+the identical summed sketch), the consistent residual update is
+
+    acc_p' = u_p  with coordinates I zeroed.
+
+Then sum_p acc_p' = U - U|_I, i.e. the global residual is exactly the
+unapplied mass — no per-worker drift.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init(d: int, dtype=jnp.float32) -> Array:
+    return jnp.zeros((d,), dtype)
+
+
+def add(acc: Array, g: Array) -> Array:
+    """u = acc + g (the vector that gets compressed this step)."""
+    return acc + g.astype(acc.dtype)
+
+
+def residual_global(u: Array, idx: Array) -> Array:
+    """acc' = u with the globally-selected coordinates zeroed."""
+    return u.at[idx].set(0.0)
+
+
+def residual_dense(u: Array, applied: Array) -> Array:
+    """acc' = u - applied, for compressors returning a dense local update."""
+    return u - applied

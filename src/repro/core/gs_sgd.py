@@ -1,0 +1,302 @@
+"""gs-SGD distributed train/serve steps (runs inside a manual shard_map).
+
+This is the layer that composes the paper's technique with the model zoo,
+the flat-parameter storage, the optimizer, and the mesh. Two storage modes
+(``configs.DP_MODE`` picks per arch):
+
+'dp' (paper-faithful):
+    Parameter/optimizer/EF state replicated over the data-parallel axes
+    ('data'[, 'pod']); model-sharded leaves live whole per model rank,
+    TP-replicated leaves live sharded over 'model' and are all-gathered at
+    use (see flatten.py — this makes every flat coordinate uniquely owned,
+    so per-worker top-k selection cannot de-synchronize replicas, and the
+    gather transpose sums TP gradients automatically). gs-SGD compresses
+    the gradient exchange over ALL dp axes — exactly Alg. 1.
+
+'fsdp' (beyond-paper, for >4B-param archs):
+    State additionally sharded over the in-pod 'data' axis (ZeRO-3): the
+    scan body all-gathers one cycle's bf16 weights, and backward's
+    psum_scatter returns grads summed-over-'data' in storage layout. The
+    in-pod reduction is therefore dense (fast ICI), and gs-SGD compresses
+    the remaining *cross-pod* exchange — the slow link, which is precisely
+    the regime (1 GbE) the paper targets. Single-pod fsdp has no
+    compression axis: the step is dense and EF-free.
+
+All collectives are explicit (lax.psum / all_gather inside shard_map); the
+same step functions run under ``jax.vmap(..., axis_name=...)`` for the CPU
+multi-worker simulations used in tests and convergence benches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as comp
+from repro.models.common import ArchConfig, ShardCtx
+from repro.models.flatten import (SEG_NAMES, FlatSpec, make_flat_spec,
+                                  pack_segs, unpack_segs)
+from repro.models import model as mdl
+from repro.optim.optimizers import Optimizer
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Static description of the mesh the step runs in."""
+
+    tp: int                       # size of the 'model' axis
+    data: int                     # size of the 'data' axis
+    pod: int = 1                  # size of the 'pod' axis (1 = single pod)
+    tp_axis: str | None = "model"
+    data_axis: str | None = "data"  # None -> single-device smoke path
+    pod_axis: str | None = None   # None on single-pod meshes
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        axes = (self.pod_axis,) if self.pod_axis else ()
+        return axes + ((self.data_axis,) if self.data_axis else ())
+
+    @property
+    def dp_size(self) -> int:
+        return self.pod * self.data
+
+    def ctx(self, dtype=jnp.bfloat16, comm_dtype=None) -> ShardCtx:
+        return ShardCtx(tp=self.tp, tp_axis=self.tp_axis,
+                        dp_axes=self.dp_axes, dtype=dtype,
+                        comm_dtype=comm_dtype)
+
+
+def _gather_closures(ma: MeshAxes, dp_mode: str, dtype):
+    """(gather_sharded, gather_replicated) for the storage layout.
+
+    Casts to the compute dtype BEFORE gathering (halves collective bytes);
+    the autodiff transpose casts the f32 cotangent back after psum_scatter.
+    """
+    def gmodel(v):
+        if ma.tp_axis is None:
+            return v
+        return jax.lax.all_gather(v, ma.tp_axis, axis=0, tiled=True)
+
+    def gdata(v):
+        if ma.data_axis is None:
+            return v
+        return jax.lax.all_gather(v, ma.data_axis, axis=0, tiled=True)
+
+    cast = lambda v: v.astype(dtype)  # noqa: E731
+    if dp_mode == "dp":
+        return (lambda v: cast(v)), (lambda v: gmodel(cast(v)))
+    if dp_mode == "fsdp":
+        return (lambda v: gdata(cast(v))), (lambda v: gdata(gmodel(cast(v))))
+    raise ValueError(f"unknown dp_mode {dp_mode!r}")
+
+
+def seg_divisors(ma: MeshAxes, dp_mode: str) -> dict[str, int]:
+    """By how much each stored segment's last dim is divided on-device."""
+    d = 1 if dp_mode == "dp" else ma.data
+    return {"top_s": d, "top_r": d * ma.tp,
+            "cycles_s": d, "cycles_r": d * ma.tp}
+
+
+def local_seg_shapes(fs: FlatSpec, ma: MeshAxes,
+                     dp_mode: str) -> dict[str, tuple[int, ...]]:
+    div = seg_divisors(ma, dp_mode)
+    out = {}
+    for k, shape in fs.seg_shapes().items():
+        assert shape[-1] % div[k] == 0, (k, shape, div[k])
+        out[k] = shape[:-1] + (shape[-1] // div[k],)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStep:
+    """Bound train step + its static metadata (comm stats, state builder)."""
+
+    fn: Callable[..., tuple[Any, dict]]
+    fs: FlatSpec
+    ma: MeshAxes
+    dp_mode: str
+    compressor: Any | None
+    d_local: int                  # flat coords per device (compressor input)
+
+    def init_state(self, key: Array, opt: Optimizer) -> Any:
+        """Concrete state for single-device (tp=1, dp=1) smoke/test runs."""
+        from repro.models.flatten import init_flat_params
+        assert self.ma.tp == 1 and self.ma.dp_size == 1
+        params = init_flat_params(self.fs.cfg, key, 1, self.fs)
+        return make_state(params, opt, self.compressor, self.d_local)
+
+
+def make_state(params: dict, opt: Optimizer, compressor, d_local: int,
+               ef_dtype=jnp.float32) -> dict:
+    opt_state = {k: opt.init(v.shape) for k, v in params.items()}
+    ef = (compressor.init(d_local) if compressor is not None else
+          jnp.zeros((0,), jnp.float32))
+    if compressor is not None and ef_dtype != jnp.float32:
+        ef = jax.tree_util.tree_map(lambda a: a.astype(ef_dtype), ef)
+    return {"params": params, "opt": opt_state, "ef": ef,
+            "step": jnp.int32(0)}
+
+
+def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
+                    dp_mode: str = "dp",
+                    compressor_name: str | None = "gs-sgd",
+                    compressor_kw: dict | None = None,
+                    remat: bool = True, dtype=jnp.bfloat16,
+                    microbatch: int | None = None,
+                    clip_norm: float | None = None,
+                    fs: FlatSpec | None = None) -> TrainStep:
+    """Build the per-device train step (to be wrapped in shard_map/vmap).
+
+    compressor_name=None or 'dense' -> dense psum baseline. In fsdp mode
+    the compression axis is the pod axis only (grads arrive pre-reduced
+    over 'data'); a single-pod fsdp step is dense regardless.
+
+    microbatch: per-device rows per gradient-accumulation slice (None =
+    whole local batch in one shot). Compression/optimizer run ONCE per
+    step on the accumulated gradient — faithful to Alg. 1's per-iteration
+    semantics regardless of accumulation.
+    """
+    import math as _math
+
+    fs = fs or make_flat_spec(cfg, ma.tp)
+    ctx = ma.ctx(dtype)
+    gathers = _gather_closures(ma, dp_mode, dtype)
+    shapes = local_seg_shapes(fs, ma, dp_mode)
+    d_local = sum(_math.prod(s) for s in shapes.values())
+
+    # In 'dp' the compressor sums raw per-worker grads over all dp axes; in
+    # 'fsdp' backward's psum_scatter has already summed over 'data', so only
+    # the pod axis remains. Either way ``upd`` ends up as the SUM over all
+    # dp_size workers and is divided once below.
+    if dp_mode == "dp":
+        comp_axes: tuple[str, ...] = ma.dp_axes
+        comp_n = ma.dp_size
+    else:
+        comp_axes = (ma.pod_axis,) if ma.pod_axis else ()
+        comp_n = ma.pod
+
+    compressor = None
+    if compressor_name not in (None, "dense") and comp_axes:
+        compressor = comp.make(compressor_name, **(compressor_kw or {}))
+
+    def train_step(state: dict, batch: dict,
+                   include: Array | None = None) -> tuple[dict, dict]:
+        params, opt_state, ef, step = (state["params"], state["opt"],
+                                       state["ef"], state["step"])
+
+        # The loss is replicated across the TP axis, so each rank seeds a
+        # cotangent of 1 and the collective transposes (psum -> psum,
+        # all_gather -> psum_scatter) compute the COMBINED objective's
+        # gradient: d(sum_r L_r)/d(theta) = tp * dL/d(theta) — exactly tp x
+        # too large (verified empirically in tests/test_tp.py). Seeding
+        # with L/tp cancels it exactly; the reported value is scaled back.
+        inv_tp = 1.0 / ma.tp
+
+        def loss_of(p, b):
+            return inv_tp * mdl.loss_fn(cfg, ctx, fs, p, b, gathers=gathers,
+                                        remat=remat)
+
+        b_loc = batch["tokens"].shape[0]
+        mb = microbatch or b_loc
+        if mb >= b_loc:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            assert b_loc % mb == 0, (b_loc, mb)
+            n_mb = b_loc // mb
+            slices = jax.tree_util.tree_map(
+                lambda a: a.reshape((n_mb, mb) + a.shape[1:]), batch)
+
+            def acc_body(carry, b):
+                l_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, b)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (l_acc + l, g_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0.0), zeros), slices)
+            loss = loss / n_mb
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
+        g_flat = pack_segs(grads)
+
+        if compressor is not None:
+            kw = {"include": include} if include is not None else {}
+            ef32 = jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.float32), ef)
+            upd, ef_new, _ = compressor.step(
+                ef32, g_flat, axis=comp_axes, nworkers=comp_n, **kw)
+            ef_new = jax.tree_util.tree_map(
+                lambda new, old: new.astype(old.dtype), ef_new, ef)
+        elif comp_axes:                    # dense baseline over dp axes
+            upd = jax.lax.psum(g_flat, comp_axes)
+            ef_new = ef
+        else:                              # fsdp single-pod: nothing left
+            upd = g_flat                   # already summed over 'data'
+            ef_new = ef
+
+        g_mean = upd / ma.dp_size
+
+        gsq = jnp.sum(g_mean * g_mean)
+        # coords are disjoint across 'model' (and across 'data' in fsdp)
+        norm_axes = tuple(a for a in (
+            ma.tp_axis, ma.data_axis if dp_mode == "fsdp" else None) if a)
+        if norm_axes:
+            gsq = jax.lax.psum(gsq, norm_axes)
+        gnorm = jnp.sqrt(gsq)
+        if clip_norm is not None:  # global-norm clip on the aggregated grad
+            g_mean = g_mean * jnp.minimum(1.0, clip_norm
+                                          / jnp.maximum(gnorm, 1e-12))
+        g_segs = unpack_segs(g_mean, params)
+
+        new_params, new_opt = {}, {}
+        for k in SEG_NAMES:
+            new_params[k], new_opt[k] = opt.apply(params[k], g_segs[k],
+                                                  opt_state[k], step)
+
+        loss = loss * ma.tp  # undo the grad-seed scaling for reporting
+        loss_rep = jax.lax.pmean(loss, ma.dp_axes) if ma.dp_axes else loss
+        new_state = {"params": new_params, "opt": new_opt, "ef": ef_new,
+                     "step": step + 1}
+        return new_state, {"loss": loss_rep, "grad_norm": gnorm}
+
+    return TrainStep(fn=train_step, fs=fs, ma=ma, dp_mode=dp_mode,
+                     compressor=compressor, d_local=d_local)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_serve_fns(cfg: ArchConfig, ma: MeshAxes, *, dp_mode: str = "dp",
+                   dtype=jnp.bfloat16, comm_dtype=None,
+                   fs: FlatSpec | None = None):
+    """(prefill, decode) bound to the storage layout. Params segs only —
+    no optimizer/EF state at serving time. comm_dtype=float8_e4m3fn puts
+    the activation reductions on the wire in fp8 (4x fewer bytes)."""
+    fs = fs or make_flat_spec(cfg, ma.tp)
+    ctx = ma.ctx(dtype, comm_dtype)
+    gathers = _gather_closures(ma, dp_mode, dtype)
+
+    def prefill(params: dict, batch: dict, cache: Any):
+        return mdl.prefill_fn(cfg, ctx, fs, params, batch, cache,
+                              gathers=gathers)
+
+    def decode(params: dict, tokens: Array, kv_len: Array, cache: Any,
+               cross_kv: Array | None = None):
+        return mdl.decode_fn(cfg, ctx, fs, params, tokens, kv_len, cache,
+                             cross_kv=cross_kv, gathers=gathers)
+
+    return prefill, decode

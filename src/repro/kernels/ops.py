@@ -1,0 +1,47 @@
+"""Public jit'd entry points for the Count-Sketch kernels.
+
+Dispatch policy: on TPU the Pallas kernels run compiled; everywhere else the
+pure-jnp reference runs (fast on CPU), while tests exercise the kernels in
+``interpret=True`` mode explicitly to validate the TPU code path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.count_sketch import SketchConfig
+from repro.kernels import ref
+from repro.kernels.sketch_encode import sketch_encode as _pallas_encode
+from repro.kernels.sketch_decode import sketch_decode as _pallas_decode
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def encode(cfg: SketchConfig, g: Array, *, use_pallas: bool | None = None,
+           interpret: bool | None = None) -> Array:
+    """Count-Sketch encode: any-shape ``g`` -> (rows, width) f32."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _pallas_encode(cfg, g, interpret=interp)
+    return ref.count_sketch_encode(cfg, g.reshape(-1))
+
+
+def decode(cfg: SketchConfig, sketch: Array, d: int, *,
+           use_pallas: bool | None = None,
+           interpret: bool | None = None) -> Array:
+    """Count-Sketch decode: (rows, width) -> (d,) coordinate estimates."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return _pallas_decode(cfg, sketch, d, interpret=interp)
+    return ref.count_sketch_decode(cfg, sketch, d)

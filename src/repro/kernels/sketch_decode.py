@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Count-Sketch decode (query all coordinates).
+
+Decode is the transpose of encode: the estimate matrix row is
+
+    est[r, i] = sign_r(i) * sketch[r, h_r(i)]
+
+i.e. a gather — again scatter/gather-hostile on TPU. We use the same signed
+one-hot tile as the encoder and contract against the sketch row instead:
+
+    est[r, iblk] = O_r[iblk, :] @ sketch[r, :]      (block_d, W) @ (W,)
+
+Grid = (d/block_d, W/block_w) with the bucket axis innermost: a (R, block_d)
+f32 VMEM scratch accumulates partial gathers over bucket blocks (each
+coordinate's bucket lands in exactly one block, so "accumulate" = select),
+and on the last bucket block the kernel reduces rows to the median estimate.
+Median-of-R for small static R is a jnp.sort over the row axis (R <= 8 — a
+fixed sorting network after lowering).
+
+VMEM per step ~= block_d*block_w*4 (one-hot) + R*(block_w + block_d)*4:
+2.1 MB at defaults. Matmul dims MXU-aligned as in the encoder.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.count_sketch import SketchConfig
+
+Array = jax.Array
+
+
+def _decode_kernel(hash_ref, sk_ref, out_ref, acc_ref, *, rows: int,
+                   block_d: int, block_w: int, shift: int, n_w: int):
+    i = pl.program_id(0)  # coordinate block (outer)
+    j = pl.program_id(1)  # bucket block (inner, accumulation axis)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    idx = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 0)
+           + jnp.uint32(i * block_d))
+    col = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 1)
+           + jnp.uint32(j * block_w))
+
+    acc = acc_ref[...]
+    for r in range(rows):  # R is small & static — unrolled
+        a = hash_ref[r, 0]
+        b = hash_ref[r, 1]
+        c = hash_ref[r, 2]
+        d_ = hash_ref[r, 3]
+        bucket = (a * idx + b) >> jnp.uint32(shift)
+        sign = 1.0 - 2.0 * ((c * idx + d_) >> jnp.uint32(31)).astype(jnp.float32)
+        onehot = jnp.where(bucket == col, sign, 0.0)  # (B, BW)
+        row = sk_ref[r, :].astype(jnp.float32).reshape(block_w, 1)
+        gathered = jnp.dot(onehot, row, preferred_element_type=jnp.float32)
+        acc = acc.at[r, :].add(gathered[:, 0])
+    acc_ref[...] = acc
+
+    @pl.when(j == n_w - 1)
+    def _finalize():
+        est = jnp.sort(acc_ref[...], axis=0)  # (R, B) sorted per coordinate
+        if rows % 2 == 1:
+            out_ref[...] = est[rows // 2, :]
+        else:
+            out_ref[...] = 0.5 * (est[rows // 2 - 1, :] + est[rows // 2, :])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "d", "block_d", "block_w", "interpret"),
+)
+def sketch_decode(cfg: SketchConfig, sketch: Array, d: int, *,
+                  block_d: int = 1024, block_w: int = 512,
+                  interpret: bool = True) -> Array:
+    """Estimate all ``d`` coordinates from an (R, W) sketch -> (d,) f32."""
+    block_d = min(block_d, max(8, d))
+    block_w = min(block_w, cfg.width)
+    d_pad = d + ((-d) % block_d)
+    n_d = d_pad // block_d
+    n_w = cfg.width // block_w
+    hash_params = jnp.asarray(cfg.hash_params)
+
+    kernel = functools.partial(
+        _decode_kernel, rows=cfg.rows, block_d=block_d, block_w=block_w,
+        shift=32 - cfg.log2_width, n_w=n_w)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_d, n_w),
+        in_specs=[
+            pl.BlockSpec((cfg.rows, 4), lambda i, j: (0, 0)),
+            pl.BlockSpec((cfg.rows, block_w), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cfg.rows, block_d), jnp.float32)],
+        interpret=interpret,
+    )(hash_params, sketch.astype(jnp.float32))
+    return out[:d]

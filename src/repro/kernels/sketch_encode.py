@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: Count-Sketch encode as blocked signed one-hot matmuls.
+
+GPU Count-Sketch encoders rely on atomic scatter-add; TPUs have neither
+atomics nor fast data-dependent scatter. The TPU-native formulation (DESIGN.md
+§3.1) observes that a sketch row is a matmul with an implicit signed one-hot
+matrix:
+
+    sketch[r] = g @ O_r,   O_r[i, h_r(i)] = sign_r(i), else 0.
+
+We tile ``g`` into blocks of ``block_d`` elements and the ``W`` buckets into
+blocks of ``block_w`` lanes. Grid = (W/block_w, d/block_d) with the element
+axis innermost, so each output column-block stays resident in VMEM while the
+gradient streams through. Per grid step the kernel
+
+  1. recomputes bucket ids / signs for the element block with branch-free
+     multiply-shift hashes (uint32 vector ALU),
+  2. materializes the (block_d, block_w) signed one-hot tile,
+  3. contracts (1, block_d) @ (block_d, block_w) on the MXU,
+  4. accumulates into the (R, block_w) output tile (f32).
+
+VMEM per step ~= block_d * block_w * 4 B (one-hot tile) + R * block_w * 4 B
+(accumulator) + block_d * 4 B (gradient block): 2.1 MB at the 1024x512
+default. All matmul dims are multiples of 128 -> MXU-aligned.
+
+FLOP cost is 2*d*W*R MACs (the price of scatter-free encoding); for the
+sketch sizes gs-SGD uses (W ~ 2^14..2^17) this is a small fraction of the
+model's backward FLOPs — quantified in benchmarks/time_breakdown.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.count_sketch import SketchConfig
+
+Array = jax.Array
+
+
+def _encode_kernel(hash_ref, g_ref, out_ref, *, rows: int, block_d: int,
+                   block_w: int, shift: int):
+    j = pl.program_id(0)  # bucket-column block (outer)
+    i = pl.program_id(1)  # element block (inner, accumulation axis)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32).reshape(1, block_d)  # (1, B)
+
+    # Element index for every (element, bucket) cell; uniform across columns.
+    idx = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 0)
+           + jnp.uint32(i * block_d))
+    # Bucket id owned by each column of this tile.
+    col = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 1)
+           + jnp.uint32(j * block_w))
+
+    acc = out_ref[...]
+    for r in range(rows):  # R is small & static — unrolled
+        a = hash_ref[r, 0]
+        b = hash_ref[r, 1]
+        c = hash_ref[r, 2]
+        d_ = hash_ref[r, 3]
+        bucket = (a * idx + b) >> jnp.uint32(shift)
+        sign = 1.0 - 2.0 * ((c * idx + d_) >> jnp.uint32(31)).astype(jnp.float32)
+        onehot = jnp.where(bucket == col, sign, 0.0)  # (B, BW) signed one-hot
+        contrib = jnp.dot(g, onehot, preferred_element_type=jnp.float32)  # (1, BW)
+        acc = acc.at[r, :].add(contrib[0])
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_d", "block_w", "interpret"),
+)
+def sketch_encode(cfg: SketchConfig, g: Array, *, block_d: int = 1024,
+                  block_w: int = 512, interpret: bool = True) -> Array:
+    """Count-Sketch encode ``g`` (any shape) -> (rows, width) f32 sketch."""
+    g = g.reshape(-1)
+    d = g.shape[0]
+    block_d = min(block_d, max(8, d))
+    block_w = min(block_w, cfg.width)
+    pad = (-d) % block_d
+    if pad:
+        g = jnp.pad(g, (0, pad))  # zero elements contribute nothing
+    n_d = g.shape[0] // block_d
+    n_w = cfg.width // block_w
+    hash_params = jnp.asarray(cfg.hash_params)  # (R, 4) uint32
+
+    kernel = functools.partial(
+        _encode_kernel, rows=cfg.rows, block_d=block_d, block_w=block_w,
+        shift=32 - cfg.log2_width)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n_w, n_d),
+        in_specs=[
+            pl.BlockSpec((cfg.rows, 4), lambda j, i: (0, 0)),
+            pl.BlockSpec((block_d,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((cfg.rows, block_w), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((cfg.rows, cfg.width), jnp.float32),
+        interpret=interpret,
+    )(hash_params, g)

@@ -1,0 +1,3 @@
+from repro.launch.mesh import make_production_mesh, mesh_axes_of
+
+__all__ = ["make_production_mesh", "mesh_axes_of"]

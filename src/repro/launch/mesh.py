@@ -1,0 +1,32 @@
+"""Production meshes (a FUNCTION, so importing never touches device state).
+
+Single pod: (16, 16) = 256 chips, axes ('data', 'model') — TP=16 inside an
+ICI-connected slice, DP=16 across it. Multi-pod: (2, 16, 16) = 512 chips,
+axes ('pod', 'data', 'model') — the 'pod' axis crosses the slow (DCI)
+inter-pod links; gs-SGD's compressed exchange is aimed exactly there.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.gs_sgd import MeshAxes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes_of(mesh) -> MeshAxes:
+    """Derive the static MeshAxes description from a jax Mesh."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return MeshAxes(
+        tp=sizes.get("model", 1),
+        data=sizes.get("data", 1),
+        pod=sizes.get("pod", 1),
+        tp_axis="model" if "model" in sizes else None,
+        data_axis="data" if "data" in sizes else None,
+        pod_axis="pod" if "pod" in sizes else None,
+    )

@@ -1,0 +1,72 @@
+"""Serving driver: batched prefill + greedy decode loop.
+
+Demonstrates the inference lowering targets (``prefill_fn``/``decode_fn``)
+end-to-end on CPU with a reduced config; on a mesh the same step functions
+run under shard_map exactly as lowered by the dry-run (decode_32k /
+long_500k cells).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SMOKES
+from repro.models.common import ShardCtx
+from repro.models.flatten import init_flat_params, make_flat_spec
+from repro.models.model import decode_fn, init_cache, prefill_fn
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=list(ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
+    ctx = ShardCtx(tp=1, tp_axis=None, dtype=jnp.float32)
+    fs = make_flat_spec(cfg, 1)
+    segs = init_flat_params(cfg, jax.random.PRNGKey(args.seed), 1, fs)
+
+    B, S, T = args.batch, args.prompt_len, args.prompt_len + args.gen
+    key = jax.random.PRNGKey(args.seed + 1)
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    cross = None
+    if cfg.family == "vlm":
+        cross = 0.02 * jax.random.normal(
+            key, (B, cfg.n_cross_tokens, cfg.d_model), jnp.float32)
+
+    cache = init_cache(cfg, ctx, B, T, jnp.float32)
+    prefill = jax.jit(lambda p, b, c: prefill_fn(cfg, ctx, fs, p, b, c))
+    decode = jax.jit(lambda p, t, kl, c: decode_fn(
+        cfg, ctx, fs, p, t, kl, c, cross_kv=cross))
+
+    t0 = time.time()
+    logits, cache = prefill(segs, {"tokens": prompts, "cross_kv": cross},
+                            cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(args.gen - 1):
+        tok, cache = decode(segs, tok[:, None], jnp.int32(S + i), cache)
+        out.append(tok)
+    gen = jnp.stack(out, axis=1)
+    dt = time.time() - t0
+    tps = B * args.gen / dt
+    print(f"generated {gen.shape} tokens in {dt:.2f}s ({tps:.1f} tok/s)")
+    for b in range(min(B, 2)):
+        print(f"  sample {b}: {gen[b].tolist()}")
+    return {"tokens": gen, "tok_per_s": tps}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Global array specs (ShapeDtypeStruct + NamedSharding) for every lowering.
+
+This is the single place that knows how the LOCAL views used inside
+shard_map correspond to GLOBAL arrays on the mesh:
+
+  storage segs ('dp'):   top_s (tp*f_ts,) P('model');   top_r (f_tr,) P('model')
+  storage segs ('fsdp'): top_s (tp*f_ts,) P(('model','data'));
+                         top_r (f_tr,)   P(('data','model'))
+  (cycles segs identical with a leading replicated n_cycles axis)
+
+The orderings match the gather closures in core/gs_sgd.py: *_s gathers over
+'data' inside a per-model-rank contiguous block (model-major); *_r gathers
+'model' innermost (data-major). EF/compressor state is private per device.
+Batch/cache batch-dims shard over the dp axes when divisible, else
+replicate (long_500k's global_batch=1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.gs_sgd import MeshAxes, local_seg_shapes, seg_divisors
+from repro.models import mamba as mb
+from repro.models import rwkv as rk
+from repro.models.common import ArchConfig, head_geometry
+from repro.models.flatten import FlatSpec
+from repro.models.model import _kind_counts
+from repro.optim.optimizers import Optimizer
+
+
+def _sds(mesh, shape, dtype, pspec):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype,
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def seg_pspecs(ma: MeshAxes, dp_mode: str) -> dict[str, P]:
+    if dp_mode == "dp":
+        m = P("model")
+        return {"top_s": m, "top_r": m,
+                "cycles_s": P(None, "model"), "cycles_r": P(None, "model")}
+    return {"top_s": P(("model", "data")), "top_r": P(("data", "model")),
+            "cycles_s": P(None, ("model", "data")),
+            "cycles_r": P(None, ("data", "model"))}
+
+
+def seg_global_shapes(fs: FlatSpec, ma: MeshAxes) -> dict[str, tuple]:
+    """Global segment shapes: the *_s segs concatenate tp local shards."""
+    return {"top_s": (ma.tp * fs.f_top_s,), "top_r": (fs.f_top_r,),
+            "cycles_s": (fs.n_cycles, ma.tp * fs.f_cyc_s),
+            "cycles_r": (fs.n_cycles, fs.f_cyc_r)}
+
+
+def param_specs_global(fs: FlatSpec, ma: MeshAxes, dp_mode: str, mesh,
+                       dtype=jnp.float32) -> dict[str, Any]:
+    ps = seg_pspecs(ma, dp_mode)
+    gs = seg_global_shapes(fs, ma)
+    return {k: _sds(mesh, gs[k], dtype, ps[k]) for k in gs}
+
+
+def state_specs_global(fs: FlatSpec, ma: MeshAxes, dp_mode: str, mesh,
+                       opt: Optimizer, d_local: int, *, with_ef: bool,
+                       ef_dtype=jnp.float32) -> dict[str, Any]:
+    params = param_specs_global(fs, ma, dp_mode, mesh)
+    opt_state = {}
+    for k, sd in params.items():
+        slot = _sds(mesh, sd.shape, jnp.float32, sd.sharding.spec)
+        opt_state[k] = slot if opt.slots == 1 else tuple(
+            _sds(mesh, sd.shape, jnp.float32, sd.sharding.spec)
+            for _ in range(opt.slots))
+    n_dev = ma.tp * ma.data * ma.pod
+    all_axes = tuple(a for a in (ma.pod_axis, ma.data_axis, ma.tp_axis) if a)
+    ef = (_sds(mesh, (n_dev * d_local,), ef_dtype, P(all_axes)) if with_ef
+          else _sds(mesh, (0,), jnp.float32, P(None)))
+    step = _sds(mesh, (), jnp.int32, P())
+    return {"params": params, "opt": opt_state, "ef": ef, "step": step}
+
+
+def _batch_pspec(ma: MeshAxes, global_batch: int, extra_dims: int) -> P:
+    dp = ma.dp_axes
+    if dp and global_batch % ma.dp_size == 0:
+        return P(dp, *([None] * extra_dims))
+    return P(None, *([None] * extra_dims))
+
+
+def batch_specs_global(cfg: ArchConfig, ma: MeshAxes, mesh, *,
+                       global_batch: int, seq_len: int,
+                       with_labels: bool) -> dict[str, Any]:
+    toks = _sds(mesh, (global_batch, seq_len), jnp.int32,
+                _batch_pspec(ma, global_batch, 1))
+    out = {"tokens": toks}
+    if with_labels:
+        out["labels"] = toks
+    if cfg.family == "vlm":
+        out["cross_kv"] = _sds(
+            mesh, (global_batch, cfg.n_cross_tokens, cfg.d_model),
+            jnp.bfloat16, _batch_pspec(ma, global_batch, 2))
+    return out
+
+
+def cache_specs_global(cfg: ArchConfig, ma: MeshAxes, mesh, *,
+                       global_batch: int, t_cache: int,
+                       dtype=jnp.bfloat16) -> Any:
+    """Global cache pytree mirroring model.init_cache's local layout."""
+    n = cfg.n_cycles
+    g = head_geometry(cfg, ma.tp)
+    nkv_store = ma.tp if g.kv_replicated else g.nkv  # tp ranks x 1, or nkv
+    bp = _batch_pspec(ma, global_batch, 0)
+    b_axes = tuple(bp)[0] if len(tuple(bp)) else None
+
+    def kv(cnt):
+        shape = (n, cnt, global_batch, t_cache, nkv_store, cfg.hd)
+        pspec = P(None, None, b_axes, None, "model", None)
+        return {"k": _sds(mesh, shape, dtype, pspec),
+                "v": _sds(mesh, shape, dtype, pspec)}
+
+    cache: dict[str, Any] = {}
+    for kind, cnt in _kind_counts(cfg).items():
+        if kind in ("attn", "moe"):
+            cache[kind] = kv(cnt)
+        elif kind == "rwkv":
+            nh, hd = rk.rwkv_geometry(cfg, ma.tp)
+            cache[kind] = {
+                "s": _sds(mesh, (n, cnt, global_batch, nh, hd, hd),
+                          jnp.float32,
+                          P(None, None, b_axes, "model", None, None)),
+                "tm_prev": _sds(mesh, (n, cnt, global_batch, cfg.d_model),
+                                jnp.float32, P(None, None, b_axes, None)),
+                "cm_prev": _sds(mesh, (n, cnt, global_batch, cfg.d_model),
+                                jnp.float32, P(None, None, b_axes, None)),
+            }
+        elif kind == "mamba":
+            nh, hd, ns = mb.mamba_geometry(cfg, ma.tp)
+            cache[kind] = {
+                "h": _sds(mesh, (n, cnt, global_batch, nh, ns, hd),
+                          jnp.float32,
+                          P(None, None, b_axes, "model", None, None)),
+                "conv": _sds(mesh, (n, cnt, global_batch, mb._CONV_W - 1,
+                                    nh * hd), dtype,
+                             P(None, None, b_axes, None, "model")),
+            }
+    if "shared_attn" in cfg.cycle:
+        shape = (n, 1, global_batch, t_cache, nkv_store, cfg.hd)
+        pspec = P(None, None, b_axes, None, "model", None)
+        cache["shared_attn"] = {"k": _sds(mesh, shape, dtype, pspec),
+                                "v": _sds(mesh, shape, dtype, pspec)}
+    return cache
+
+
+def shard_map_specs(specs_tree: Any) -> Any:
+    """Extract the PartitionSpec pytree (shard_map in_specs) from SDS specs."""
+    return jax.tree_util.tree_map(lambda s: s.sharding.spec, specs_tree)

@@ -1,0 +1,12 @@
+from repro.models import common, flatten, layers, mamba, model, moe, rwkv
+from repro.models.common import ArchConfig, ShardCtx, param_specs
+from repro.models.flatten import FlatSpec, init_flat_params, make_flat_spec
+from repro.models.model import (cache_shapes, decode_fn, init_cache, loss_fn,
+                                prefill_fn)
+
+__all__ = [
+    "common", "flatten", "layers", "mamba", "model", "moe", "rwkv",
+    "ArchConfig", "ShardCtx", "param_specs", "FlatSpec", "init_flat_params",
+    "make_flat_spec", "cache_shapes", "decode_fn", "init_cache", "loss_fn",
+    "prefill_fn",
+]

@@ -1,0 +1,144 @@
+"""The paper's own benchmark models: ResNet-20 and VGG-16 for CIFAR-10.
+
+Pure-JAX (init + apply) implementations used by the convergence-fidelity
+benchmarks (paper Figs. 2-7, Table II): small enough to train on CPU with
+P vmap-simulated workers, with parameter counts in the regime the paper
+sketches (ResNet-20 ~0.27M, VGG-16 ~15M).
+
+Deviation (documented): BatchNorm is replaced by GroupNorm(8) — running
+batch statistics are ill-defined under the vmap-per-worker simulation, and
+every compressor sees the identical model so the *comparison* the paper
+makes (gs-SGD vs gTop-k vs Sketched-SGD) is preserved.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _conv(x: Array, w: Array, stride: int = 1) -> Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _groupnorm(x: Array, scale: Array, bias: Array, groups: int = 8) -> Array:
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(n, h, w, c)
+    return (xn * (1.0 + scale) + bias).astype(x.dtype)
+
+
+def _he(key, shape):
+    fan_in = shape[0] * shape[1] * shape[2] if len(shape) == 4 else shape[0]
+    return jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-20 (CIFAR): 3 stages x 3 basic blocks, widths (16, 32, 64)
+# ---------------------------------------------------------------------------
+
+
+def init_resnet20(key: Array, n_classes: int = 10, width: int = 16) -> Any:
+    keys = iter(jax.random.split(key, 64))
+    p: dict = {"stem": {"w": _he(next(keys), (3, 3, 3, width)),
+                        "s": jnp.zeros(width), "b": jnp.zeros(width)}}
+    c_in = width
+    for s, mult in enumerate((1, 2, 4)):
+        c_out = width * mult
+        for b in range(3):
+            blk = {
+                "w1": _he(next(keys), (3, 3, c_in, c_out)),
+                "s1": jnp.zeros(c_out), "b1": jnp.zeros(c_out),
+                "w2": _he(next(keys), (3, 3, c_out, c_out)),
+                "s2": jnp.zeros(c_out), "b2": jnp.zeros(c_out),
+            }
+            if c_in != c_out:
+                blk["proj"] = _he(next(keys), (1, 1, c_in, c_out))
+            p[f"s{s}b{b}"] = blk
+            c_in = c_out
+    p["fc"] = {"w": _he(next(keys), (c_in, n_classes)),
+               "b": jnp.zeros(n_classes)}
+    return p
+
+
+def resnet20_logits(p: Any, x: Array) -> Array:
+    """x: (N, 32, 32, 3) -> (N, n_classes)."""
+    h = jax.nn.relu(_groupnorm(_conv(x, p["stem"]["w"]),
+                               p["stem"]["s"], p["stem"]["b"]))
+    for s in range(3):
+        for b in range(3):
+            blk = p[f"s{s}b{b}"]
+            stride = 2 if (s > 0 and b == 0) else 1
+            y = jax.nn.relu(_groupnorm(_conv(h, blk["w1"], stride),
+                                       blk["s1"], blk["b1"]))
+            y = _groupnorm(_conv(y, blk["w2"]), blk["s2"], blk["b2"])
+            sc = _conv(h, blk["proj"], stride) if "proj" in blk else h
+            h = jax.nn.relu(sc + y)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["fc"]["w"] + p["fc"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-16 (CIFAR variant): conv stacks (2,2,3,3,3), widths (64..512), 1 FC
+# ---------------------------------------------------------------------------
+
+_VGG_PLAN = ((2, 64), (2, 128), (3, 256), (3, 512), (3, 512))
+
+
+def init_vgg16(key: Array, n_classes: int = 10, width_mult: float = 1.0) -> Any:
+    keys = iter(jax.random.split(key, 64))
+    p: dict = {}
+    c_in = 3
+    for s, (reps, c) in enumerate(_VGG_PLAN):
+        c_out = max(8, int(c * width_mult))
+        for r in range(reps):
+            p[f"s{s}c{r}"] = {"w": _he(next(keys), (3, 3, c_in, c_out)),
+                              "s": jnp.zeros(c_out), "b": jnp.zeros(c_out)}
+            c_in = c_out
+    p["fc"] = {"w": _he(next(keys), (c_in, n_classes)),
+               "b": jnp.zeros(n_classes)}
+    return p
+
+
+def vgg16_logits(p: Any, x: Array) -> Array:
+    h = x
+    for s, (reps, _) in enumerate(_VGG_PLAN):
+        for r in range(reps):
+            blk = p[f"s{s}c{r}"]
+            h = jax.nn.relu(_groupnorm(_conv(h, blk["w"]),
+                                       blk["s"], blk["b"]))
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["fc"]["w"] + p["fc"]["b"]
+
+
+MODELS = {
+    "resnet20": (init_resnet20, resnet20_logits),
+    "vgg16": (init_vgg16, vgg16_logits),
+}
+
+
+def ce_loss(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def accuracy(logits: Array, labels: Array) -> Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("apply",))
+def loss_and_acc(apply, params, images, labels):
+    logits = apply(params, images)
+    return ce_loss(logits, labels), accuracy(logits, labels)

@@ -1,0 +1,206 @@
+"""Flat (raveled) parameter storage — the layout train/serve steps run on.
+
+Why flat: (1) gs-SGD sketches the *whole* flat local gradient, (2) the
+optimizer and error-feedback state are elementwise so they live happily on
+f32 vectors, and (3) FSDP shards flat vectors over the 'data' axis
+trivially (one tiled all-gather per scanned cycle), with the backward
+transpose (psum_scatter) landing grads already in storage layout.
+
+Every parameter leaf is classified by its TP placement:
+
+  * sharded    — 'model' appears in its PartitionSpec; each model rank owns
+                 a disjoint slice (local shape = Spec.local_shape(tp)).
+  * replicated — no 'model' axis (norm gains, router, replicated-KV
+                 storage, token-shift mixes). These are NOT stored
+                 replicated: they are stored *sharded over 'model'* and
+                 all-gathered at use. The gather's autodiff transpose
+                 (psum_scatter over 'model') then sums their gradients
+                 across TP ranks automatically — the correctness condition
+                 Megatron enforces with a hand-rolled "allreduce LN grads"
+                 pass — and it guarantees every flat-storage coordinate has
+                 exactly ONE owner, so gs-SGD's per-worker top-k selection
+                 can never make replicas diverge.
+
+Segments (all per model-shard, f32, zero-padded to ``pad_multiple``):
+
+    top_s    (f_top_s,)             embed / head / shared_attn sharded leaves
+    top_r    (f_top_r,)             top-level replicated leaves (full length;
+                                    stored as 1/tp slices at runtime)
+    cycles_s (n_cycles, f_cyc_s)    per-cycle sharded leaves
+    cycles_r (n_cycles, f_cyc_r)    per-cycle replicated leaves (full length)
+
+Runtime layouts divide these further: 'dp' stores *_s whole and *_r split
+over 'model'; 'fsdp' additionally splits both over 'data'. See
+``core/gs_sgd.py`` for the gather closures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, Spec, param_specs
+
+Array = jax.Array
+
+SEG_NAMES = ("top_s", "top_r", "cycles_s", "cycles_r")
+
+
+@dataclasses.dataclass(frozen=True)
+class _Leaf:
+    shape: tuple[int, ...]   # local shape (cycle axis stripped for cycles)
+    offset: int              # offset within its sub-segment
+    size: int
+    rep: bool                # True -> lives in the *_r sub-segment
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static description of the flat layout for one (arch, tp) pair."""
+
+    cfg: ArchConfig
+    tp: int
+    n_cycles: int
+    top_treedef: Any
+    top_leaves: tuple[_Leaf, ...]
+    cyc_treedef: Any
+    cyc_leaves: tuple[_Leaf, ...]
+    f_top_s: int
+    f_top_r: int
+    f_cyc_s: int
+    f_cyc_r: int
+
+    @property
+    def total(self) -> int:
+        return (self.f_top_s + self.f_top_r
+                + self.n_cycles * (self.f_cyc_s + self.f_cyc_r))
+
+    def seg_shapes(self) -> dict[str, tuple[int, ...]]:
+        return {"top_s": (self.f_top_s,), "top_r": (self.f_top_r,),
+                "cycles_s": (self.n_cycles, self.f_cyc_s),
+                "cycles_r": (self.n_cycles, self.f_cyc_r)}
+
+    # -- unflatten ---------------------------------------------------------
+    @staticmethod
+    def _build(leaves, treedef, vs: Array, vr: Array, dtype) -> Any:
+        out = []
+        for l in leaves:
+            src = vr if l.rep else vs
+            out.append(src[l.offset:l.offset + l.size]
+                       .reshape(l.shape).astype(dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def top_params(self, vs: Array, vr: Array, dtype=jnp.bfloat16) -> Any:
+        """(f_top_s,), (f_top_r,) -> top-level params pytree."""
+        return self._build(self.top_leaves, self.top_treedef, vs, vr, dtype)
+
+    def cycle_params(self, vs: Array, vr: Array, dtype=jnp.bfloat16) -> Any:
+        """(f_cyc_s,), (f_cyc_r,) -> one cycle's params pytree."""
+        return self._build(self.cyc_leaves, self.cyc_treedef, vs, vr, dtype)
+
+    # -- flatten -----------------------------------------------------------
+    def flatten(self, params: Any, dtype=jnp.float32) -> dict[str, Array]:
+        """Param pytree (param_specs layout, local shapes) -> segment dict."""
+        top_tree = {k: v for k, v in params.items() if k != "layers"}
+        tl = jax.tree_util.tree_leaves(top_tree)
+        ts = _cat([x for x, l in zip(tl, self.top_leaves) if not l.rep],
+                  self.f_top_s, dtype)
+        tr = _cat([x for x, l in zip(tl, self.top_leaves) if l.rep],
+                  self.f_top_r, dtype)
+        cl = [x.reshape(self.n_cycles, -1)
+              for x in jax.tree_util.tree_leaves(params["layers"])]
+        cs = _cat([x for x, l in zip(cl, self.cyc_leaves) if not l.rep],
+                  self.f_cyc_s, dtype, axis=1)
+        cr = _cat([x for x, l in zip(cl, self.cyc_leaves) if l.rep],
+                  self.f_cyc_r, dtype, axis=1)
+        return {"top_s": ts, "top_r": tr, "cycles_s": cs, "cycles_r": cr}
+
+
+def _cat(leaves, padded: int, dtype, axis: int = 0) -> Array:
+    if axis == 0:
+        if not leaves:
+            return jnp.zeros((padded,), dtype)
+        flat = jnp.concatenate([l.reshape(-1).astype(dtype) for l in leaves])
+        return jnp.pad(flat, (0, padded - flat.shape[0]))
+    if not leaves:
+        return jnp.zeros((leaves, padded), dtype)  # pragma: no cover
+    flat = jnp.concatenate([l.astype(dtype) for l in leaves], axis=1)
+    return jnp.pad(flat, ((0, 0), (0, padded - flat.shape[1])))
+
+
+def _pad_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _is_rep(s: Spec) -> bool:
+    return "model" not in tuple(s.pspec)
+
+
+def make_flat_spec(cfg: ArchConfig, tp: int, *,
+                   pad_multiple: int = 512) -> FlatSpec:
+    """Build the FlatSpec from param_specs (single source of truth)."""
+    specs = param_specs(cfg, tp)
+    top_tree = {k: v for k, v in specs.items() if k != "layers"}
+    is_spec = lambda x: isinstance(x, Spec)  # noqa: E731
+
+    def scan(spec_list, strip_cycle: bool):
+        off = {"s": 0, "r": 0}
+        out = []
+        for s in spec_list:
+            shape = s.local_shape(tp)
+            if strip_cycle:
+                assert shape[0] == cfg.n_cycles, (shape, cfg.n_cycles)
+                shape = tuple(shape[1:])
+            size = math.prod(shape)
+            key = "r" if _is_rep(s) else "s"
+            out.append(_Leaf(shape, off[key], size, rep=(key == "r")))
+            off[key] += size
+        return out, _pad_up(off["s"], pad_multiple), _pad_up(off["r"],
+                                                             pad_multiple)
+
+    top_specs, top_def = jax.tree_util.tree_flatten(top_tree, is_leaf=is_spec)
+    top_leaves, f_ts, f_tr = scan(top_specs, strip_cycle=False)
+    cyc_specs, cyc_def = jax.tree_util.tree_flatten(specs["layers"],
+                                                    is_leaf=is_spec)
+    cyc_leaves, f_cs, f_cr = scan(cyc_specs, strip_cycle=True)
+
+    return FlatSpec(cfg=cfg, tp=tp, n_cycles=cfg.n_cycles,
+                    top_treedef=top_def, top_leaves=tuple(top_leaves),
+                    cyc_treedef=cyc_def, cyc_leaves=tuple(cyc_leaves),
+                    f_top_s=f_ts, f_top_r=f_tr, f_cyc_s=f_cs, f_cyc_r=f_cr)
+
+
+def init_flat_params(cfg: ArchConfig, key: Array, tp: int = 1,
+                     fs: FlatSpec | None = None) -> dict[str, Array]:
+    """Random-init LOCAL flat segments for smoke tests (tp=1 only)."""
+    from repro.models.common import init_params
+
+    if tp != 1:
+        raise ValueError("concrete init is for tp=1 smoke paths; at scale "
+                         "params are initialized sharded via the launcher")
+    fs = fs or make_flat_spec(cfg, tp)
+    return fs.flatten(init_params(cfg, key, tp))
+
+
+# ---------------------------------------------------------------------------
+# Segment-dict helpers (used by train/serve steps and the compressor)
+# ---------------------------------------------------------------------------
+
+
+def pack_segs(segs: dict[str, Array]) -> Array:
+    """Segment dict -> one flat f32 vector (compressor's view)."""
+    return jnp.concatenate([segs[k].reshape(-1).astype(jnp.float32)
+                            for k in SEG_NAMES])
+
+
+def unpack_segs(vec: Array, like: dict[str, Array]) -> dict[str, Array]:
+    out, off = {}, 0
+    for k in SEG_NAMES:
+        n = like[k].size
+        out[k] = vec[off:off + n].reshape(like[k].shape)
+        off += n
+    return out

@@ -1,0 +1,165 @@
+"""Mamba2 (SSD) block — the state-space mixer of the zamba2 hybrid.
+
+Per head h with state (ns, hd):
+
+    dt_t   = softplus(x W_dt + dt_bias)          (scalar per head/step)
+    a_t    = exp(-exp(A_log) * dt_t)             (scalar decay)
+    h_t    = a_t h_{t-1} + dt_t B_t x_t^T        (B_t in R^ns, x_t in R^hd)
+    y_t    = C_t^T h_t + D x_t
+
+Because the decay is a *scalar* per head/step (Mamba2's key simplification
+vs Mamba1), the chunked form needs only an (L, L) relative-decay matrix per
+head — the SSD "matrix transformer" identity:
+
+    y_t = C_t e^{cum_t} h_in                                 (passthrough)
+        + sum_{s<=t} (C_t . B_s) e^{cum_t - cum_s} dt_s x_s  (intra chunk)
+    h_out = e^{cum_L} h_in + sum_s e^{cum_L - cum_s} dt_s B_s x_s^T
+
+All exponents are <= 0 — no clamping needed. Chunk math in f32.
+
+TP: x/z/B/C/dt projections column-parallel by head; out row-parallel (psum).
+The gated RMSNorm before the output projection normalizes over *local*
+channels (ngroups = tp grouped-norm — the standard Mamba TP treatment).
+The depthwise conv runs over the x branch only (documented simplification).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, ShardCtx, pad_to
+from repro.models.layers import linear_row, rmsnorm
+
+Array = jax.Array
+
+_CONV_W = 4  # depthwise conv width (3 past tokens + current)
+
+
+def mamba_geometry(cfg: ArchConfig, tp: int) -> tuple[int, int, int]:
+    """(n_heads padded to tp, head_dim, state_dim)."""
+    nh = pad_to(max(1, cfg.d_model // cfg.ssm_head_dim), tp)
+    return nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def _causal_conv(x: Array, w: Array, prev: Array | None) -> Array:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C); prev: (B,W-1,C) or None."""
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(_CONV_W))
+    return out
+
+
+def ssd_chunked(xh: Array, b: Array, c: Array, dt: Array, a_neg: Array,
+                h0: Array, *, chunk: int = 64) -> tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    xh: (B,S,H,hd), b/c: (B,S,H,ns), dt: (B,S,H) f32, a_neg: (H,) (= -exp(A_log)),
+    h0: (B,H,ns,hd) f32. Returns (y (B,S,H,hd) f32, h_final).
+    """
+    B, S, H, hd = xh.shape
+    ns = b.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zp4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xh, b, c = jnp.pad(xh, zp4), jnp.pad(b, zp4), jnp.pad(c, zp4)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity step
+    n = (S + pad) // L
+
+    def split(t):
+        return t.reshape((B, n, L) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    xs_, bs, cs, dts = split(xh), split(b), split(c), split(dt)
+
+    def body(h, xs):
+        xc, bc, cc, dtc = xs                      # (B,L,H,...)
+        l = dtc * a_neg                           # (B,L,H) log-decay <= 0
+        cum = jnp.cumsum(l, axis=1)               # inclusive
+        # intra-chunk: (C_t . B_s) e^{cum_t - cum_s} dt_s, s <= t
+        rel = cum[:, :, None, :] - cum[:, None, :, :]   # (B,L,L,H), t,s
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        dec = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+        att = jnp.einsum("blhn,bmhn->blmh", cc, bc) * dec * dtc[:, None]
+        y = jnp.einsum("blmh,bmhd->blhd", att, xc)
+        y = y + jnp.einsum("blhn,bhnd->blhd", cc * jnp.exp(cum)[..., None], h)
+        # state update
+        a_l = cum[:, -1]                          # (B,H)
+        bw = bc * (jnp.exp(a_l[:, None] - cum) * dtc)[..., None]
+        h = jnp.exp(a_l)[..., None, None] * h \
+            + jnp.einsum("blhn,blhd->bhnd", bw, xc)
+        return h, y
+
+    h_fin, ys = jax.lax.scan(body, h0, (xs_, bs, cs, dts))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, hd)
+    return y[:, :S], h_fin
+
+
+def ssd_step(xh: Array, b: Array, c: Array, dt: Array, a_neg: Array,
+             h0: Array) -> tuple[Array, Array]:
+    """One-token SSD. xh: (B,H,hd), b/c: (B,H,ns), dt: (B,H)."""
+    decay = jnp.exp(dt * a_neg)                          # (B,H)
+    h1 = decay[..., None, None] * h0 \
+        + (dt[..., None] * b)[..., :, None] * xh[..., None, :]
+    y = jnp.einsum("bhn,bhnd->bhd", c, h1)
+    return y, h1
+
+
+def mamba_block(p: dict, cfg: ArchConfig, ctx: ShardCtx, x: Array,
+                state: dict | None = None) -> tuple[Array, dict | None]:
+    """Pre-norm Mamba2 block. x: (B,S,d).
+
+    state (decode): {"h": (B,H_loc,ns,hd) f32, "conv": (B,W-1,dh_loc)}.
+    """
+    B, S, d = x.shape
+    nh, hd, ns = mamba_geometry(cfg, ctx.tp)
+    nh_loc = nh // ctx.tp
+
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = h @ p["wx"].astype(h.dtype)                 # (B,S,dh_loc)
+    z = h @ p["wz"].astype(h.dtype)
+    prev_conv = state["conv"] if state is not None else None
+    xc = jax.nn.silu(_causal_conv(xz, p["conv"], prev_conv))
+
+    b = (h @ p["wB"].astype(h.dtype)).reshape(B, S, nh_loc, ns)
+    c = (h @ p["wC"].astype(h.dtype)).reshape(B, S, nh_loc, ns)
+    dt = jax.nn.softplus(
+        (h @ p["wdt"].astype(h.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))          # (B,S,H_loc)
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H_loc,)
+
+    xh = xc.reshape(B, S, nh_loc, hd).astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((B, nh_loc, ns, hd), jnp.float32))
+    if S == 1:
+        y1, h1 = ssd_step(xh[:, 0], bf[:, 0], cf[:, 0], dt[:, 0], a_neg, h0)
+        y = y1[:, None]
+    else:
+        y, h1 = ssd_chunked(xh, bf, cf, dt, a_neg, h0)
+    y = y + p["D"].astype(jnp.float32)[:, None] * xh  # skip term
+    y = y.reshape(B, S, nh_loc * hd).astype(h.dtype)
+
+    # gated RMSNorm over local channels (grouped-norm TP treatment)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    x = x + linear_row(y, p["wo"], ctx).astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        conv_tail = (jnp.concatenate([prev_conv.astype(xz.dtype), xz], 1)
+                     if prev_conv is not None else
+                     jnp.pad(xz, ((0, 0), (_CONV_W - 1, 0), (0, 0))))
+        new_state = {"h": h1, "conv": conv_tail[:, -(_CONV_W - 1):, :]}
+    return x, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, ctx: ShardCtx, batch: int,
+                     dtype=jnp.bfloat16) -> dict:
+    nh, hd, ns = mamba_geometry(cfg, ctx.tp)
+    nh_loc = nh // ctx.tp
+    return {"h": jnp.zeros((batch, nh_loc, ns, hd), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_W - 1, nh_loc * hd), dtype)}

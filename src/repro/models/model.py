@@ -1,0 +1,305 @@
+"""Unified model: scan-over-cycles forward for all ten architectures.
+
+One entry point per lowering target:
+
+    loss_fn    — training forward -> scalar loss (train_4k)
+    prefill_fn — build the KV/SSM caches from a prompt, return last logits
+                 (prefill_32k)
+    decode_fn  — one new token against a cache (decode_32k / long_500k)
+
+All three run on LOCAL shards inside a fully-manual ``jax.shard_map`` (or on
+one device with ``ctx.tp_axis=None``). Parameters arrive as the flat layout
+of ``flatten.FlatSpec``; ``gather`` (FSDP) is a caller-supplied callable that
+all-gathers a flat segment over the data axis — identity when params are
+replicated. The per-cycle gather sits *inside* the scan body so the full
+bf16 weights of only one cycle are ever live (ZeRO-3 style), and its autodiff
+transpose (psum_scatter) delivers gradients pre-sharded in storage layout.
+
+The cycle body dispatches on ``cfg.cycle`` — e.g. ``('attn',)*4 + ('cross',)``
+for llama-vision, ``('mamba',)*6 + ('shared_attn',)`` for zamba2 — and is
+remat'd per cycle during training.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba as mb
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rk
+from repro.models.common import ArchConfig, ShardCtx, head_geometry
+from repro.models.flatten import FlatSpec
+from repro.models.layers import (attention_block, embed_lookup, lm_logits,
+                                 lm_loss, mlp_block, parallel_attn_mlp_block,
+                                 rmsnorm, sharded_argmax)
+
+Array = jax.Array
+Gathers = tuple[Callable[[Array], Array], Callable[[Array], Array]] | None
+
+MOE_AUX_COEF = 0.01
+
+
+def _kind_counts(cfg: ArchConfig) -> dict[str, int]:
+    counts: dict[str, int] = {}
+    for kind in cfg.cycle:
+        if kind != "shared_attn":
+            counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+def _apply_cycle(cfg: ArchConfig, ctx: ShardCtx, cyc_p: dict,
+                 shared_p: dict | None, x: Array, pos: Array, mode: str,
+                 cross_kv: Array | None, cache: dict | None,
+                 kv_len: Array | None) -> tuple[Array, Array, dict | None]:
+    """Apply one cycle of blocks. Returns (x, aux_loss, new_cache)."""
+    aux = jnp.float32(0.0)
+    new_cache: dict[str, Any] = {}
+    occ: dict[str, int] = {}
+
+    def sub(kind: str, j: int):
+        if cache is None:
+            return None
+        return jax.tree_util.tree_map(lambda a: a[j], cache[kind])
+
+    def put(kind: str, j: int, c):
+        if cache is None or c is None:
+            return
+        cur = new_cache.get(kind)
+        if cur is None:
+            cur = jax.tree_util.tree_map(
+                lambda a: jnp.zeros_like(a), cache[kind])
+        new_cache[kind] = jax.tree_util.tree_map(
+            lambda buf, leaf: buf.at[j].set(leaf.astype(buf.dtype)), cur, c)
+
+    for kind in cfg.cycle:
+        j = occ.get(kind, 0)
+        occ[kind] = j + 1
+        if kind == "shared_attn":
+            x, c = attention_block(shared_p, cfg, ctx, x, pos, mode=mode,
+                                   cache=sub(kind, j), kv_len=kv_len)
+            x = mlp_block(shared_p["mlp"], cfg, ctx, x)
+            put(kind, j, c)
+            continue
+        p = jax.tree_util.tree_map(lambda a: a[j], cyc_p[kind])
+        if kind == "attn":
+            if cfg.parallel_block:
+                x, c = parallel_attn_mlp_block(
+                    p, cfg, ctx, x, pos, mode=mode, cache=sub(kind, j),
+                    kv_len=kv_len)
+            else:
+                x, c = attention_block(p, cfg, ctx, x, pos, mode=mode,
+                                       cache=sub(kind, j), kv_len=kv_len)
+                x = mlp_block(p["mlp"], cfg, ctx, x)
+            put(kind, j, c)
+        elif kind == "cross":
+            x, _ = attention_block(p, cfg, ctx, x, pos, mode=mode,
+                                   cross_kv=cross_kv)
+            x = mlp_block(p["mlp"], cfg, ctx, x)
+        elif kind == "moe":
+            x, c = attention_block(p, cfg, ctx, x, pos, mode=mode,
+                                   cache=sub(kind, j), kv_len=kv_len)
+            x, a = moe_lib.moe_block(p["moe"], cfg, ctx, x)
+            aux = aux + a
+            put(kind, j, c)
+        elif kind == "rwkv":
+            st = sub(kind, j)
+            x, c = rk.rwkv_block(p, cfg, ctx, x, state=st)
+            put(kind, j, c)
+        elif kind == "mamba":
+            st = sub(kind, j)
+            x, c = mb.mamba_block(p, cfg, ctx, x, state=st)
+            put(kind, j, c)
+        else:  # pragma: no cover
+            raise ValueError(f"unknown block kind {kind!r}")
+    return x, aux, (new_cache if cache is not None else None)
+
+
+def _backbone(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
+              tokens: Array, pos: Array, mode: str,
+              cross_kv: Array | None = None, cache: Any = None,
+              kv_len: Array | None = None, gathers: Gathers = None,
+              remat: bool = False) -> tuple[Array, Array, Any, dict]:
+    """Embed -> scan cycles -> final norm. Returns (hidden, aux, cache, top).
+
+    segs: flat-segment dict (see flatten.py). gathers = (gather_sharded,
+    gather_replicated) — identity when storage is unsharded (tp=1 smoke /
+    'dp' sharded leaves), all-gather closures for 'model'/'data' otherwise.
+    """
+    gs_, gr_ = gathers or (lambda v: v, lambda v: v)
+    top = fs.top_params(gs_(segs["top_s"]), gr_(segs["top_r"]), ctx.dtype)
+
+    x = embed_lookup(top["embed"], tokens, ctx)
+    shared_p = top.get("shared_attn")
+
+    def body(carry, xs):
+        x, aux = carry
+        vs, vr, cyc_cache = xs
+        cyc_p = fs.cycle_params(gs_(vs), gr_(vr), ctx.dtype)
+        x, a, new_c = _apply_cycle(cfg, ctx, cyc_p, shared_p, x, pos, mode,
+                                   cross_kv, cyc_cache, kv_len)
+        return (x, aux + a), new_c
+
+    if remat:
+        body = jax.checkpoint(body)
+    cs, cr = segs["cycles_s"], segs["cycles_r"]
+    n = fs.n_cycles
+    if cache is not None:
+        # Serve path: the cache rides the scan CARRY and each cycle's slice
+        # is updated in place (dynamic_update_index lowers to an aliased
+        # DUS inside the while loop) — scanning it as xs/ys would allocate
+        # a second and third cache-sized buffer (measured in the dry-run).
+        def serve_body(carry, xs):
+            x, aux, cache_full, i = carry
+            cyc_cache = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False),
+                cache_full)
+            (x, aux), new_c = body((x, aux), (xs[0], xs[1], cyc_cache))
+            cache_full = jax.tree_util.tree_map(
+                lambda full, nc: jax.lax.dynamic_update_index_in_dim(
+                    full, nc.astype(full.dtype), i, 0),
+                cache_full, new_c)
+            return (x, aux, cache_full, i + 1), None
+
+        (x, aux, new_cache, _), _ = jax.lax.scan(
+            serve_body, (x, jnp.float32(0.0), cache, jnp.int32(0)),
+            (cs, cr))
+        x = rmsnorm(x, top["final_norm"], cfg.norm_eps)
+        return x, aux, new_cache, top
+    if cache is None:
+        carry = (x, jnp.float32(0.0))
+
+        def cyc(c, v):
+            return body(c, (v[0], v[1], None))
+
+        # sqrt-n nested-scan remat: a flat scan's backward stores the carry
+        # at every cycle (n * B*S*d — tens of GB at 94 layers); two-level
+        # scan with a remat'd outer body stores ~(n1 + n2) carries instead.
+        n2 = int(math.isqrt(n))
+        if remat and n2 >= 2:
+            n1, rem = n // n2, n % n2
+
+            def outer(c, vs):
+                c, _ = jax.lax.scan(cyc, c, vs)
+                return c, None
+
+            main = jax.tree_util.tree_map(
+                lambda a: a[:n1 * n2].reshape((n1, n2) + a.shape[1:]),
+                (cs, cr))
+            carry, _ = jax.lax.scan(jax.checkpoint(outer), carry, main)
+            if rem:
+                tail = jax.tree_util.tree_map(lambda a: a[n1 * n2:], (cs, cr))
+                carry, _ = jax.lax.scan(cyc, carry, tail)
+        else:
+            carry, _ = jax.lax.scan(cyc, carry, (cs, cr))
+        x, aux = carry
+    x = rmsnorm(x, top["final_norm"], cfg.norm_eps)
+    return x, aux, None, top
+
+
+def _head_w(cfg: ArchConfig, top: dict) -> Array:
+    return top["embed"].T if cfg.tie_embeddings else top["head"]
+
+
+# ---------------------------------------------------------------------------
+# Lowering targets
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
+            batch: dict, *, gathers: Gathers = None,
+            remat: bool = True) -> Array:
+    """Mean next-token CE (+ MoE aux). batch: tokens/labels (B,S) [cross_kv]."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    hid, aux, _, top = _backbone(cfg, ctx, fs, segs, tokens, pos, "train",
+                                 cross_kv=batch.get("cross_kv"),
+                                 gathers=gathers, remat=remat)
+    loss = lm_loss(hid, _head_w(cfg, top), batch["labels"], cfg, ctx)
+    if cfg.n_experts:
+        loss = loss + MOE_AUX_COEF * aux / max(1, cfg.n_cycles)
+    return loss
+
+
+def prefill_fn(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
+               batch: dict, cache: Any, *,
+               gathers: Gathers = None) -> tuple[Array, Any]:
+    """Prompt forward; fills ``cache`` from position 0. Returns (last-token
+    logits (B, V_local), new cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    hid, _, cache, top = _backbone(cfg, ctx, fs, segs, tokens, pos, "prefill",
+                                   cross_kv=batch.get("cross_kv"),
+                                   cache=cache, kv_len=jnp.int32(0),
+                                   gathers=gathers)
+    logits = lm_logits(hid[:, -1:, :], _head_w(cfg, top), cfg, ctx)
+    return logits[:, 0, :], cache
+
+
+def decode_fn(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
+              tokens: Array, kv_len: Array, cache: Any, *,
+              cross_kv: Array | None = None,
+              gathers: Gathers = None) -> tuple[Array, Any]:
+    """One decode step: tokens (B, 1) at position ``kv_len`` -> (next-token
+    ids (B,), updated cache)."""
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(kv_len.astype(jnp.int32), (B, S))
+    hid, _, cache, top = _backbone(cfg, ctx, fs, segs, tokens, pos, "decode",
+                                   cross_kv=cross_kv, cache=cache,
+                                   kv_len=kv_len, gathers=gathers)
+    logits = lm_logits(hid, _head_w(cfg, top), cfg, ctx)
+    return sharded_argmax(logits[:, 0, :], ctx), cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, ctx: ShardCtx, b_loc: int, t_cache: int,
+               dtype=jnp.bfloat16) -> Any:
+    """Concrete zeroed cache pytree, stacked (n_cycles, cnt, ...) leaves.
+
+    Attention/moe kinds get KV caches; rwkv/mamba get recurrent states;
+    cross blocks need none (static image KV).
+    """
+    n = cfg.n_cycles
+    g = head_geometry(cfg, ctx.tp)
+    nkv_store = 1 if g.kv_replicated else g.nkv_loc
+    cache: dict[str, Any] = {}
+
+    def kv(cnt):
+        shape = (n, cnt, b_loc, t_cache, nkv_store, cfg.hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    for kind, cnt in _kind_counts(cfg).items():
+        if kind in ("attn", "moe"):
+            cache[kind] = kv(cnt)
+        elif kind == "rwkv":
+            st = rk.init_rwkv_state(cfg, ctx, b_loc)
+            cache[kind] = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((n, cnt) + a.shape, a.dtype), st)
+        elif kind == "mamba":
+            st = mb.init_mamba_state(cfg, ctx, b_loc, dtype)
+            cache[kind] = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((n, cnt) + a.shape, a.dtype), st)
+        # 'cross': no cache
+    if "shared_attn" in cfg.cycle:
+        shape = (n, 1, b_loc, t_cache, nkv_store, cfg.hd)
+        cache["shared_attn"] = {"k": jnp.zeros(shape, dtype),
+                                "v": jnp.zeros(shape, dtype)}
+    return cache
+
+
+def cache_shapes(cfg: ArchConfig, ctx: ShardCtx, b_loc: int, t_cache: int,
+                 dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree of the cache (dry-run stand-in, no alloc)."""
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, ctx, b_loc, t_cache, dtype))

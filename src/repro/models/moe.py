@@ -1,0 +1,96 @@
+"""Mixture-of-Experts block with expert parallelism over the ``model`` axis.
+
+Because activations are replicated across the model axis between blocks
+(Megatron TP semantics — see ``layers.py``), expert parallelism needs no
+all-to-all: every rank sees every token, routes it, and processes only the
+tokens assigned to its ``ne_loc = ne / tp`` local experts; the combine is the
+same ``psum`` the row-parallel projections already use. Capacity-factor
+dispatch keeps shapes static (dropped tokens fall through the residual, as in
+Switch/GShard).
+
+TPU adaptation: positions-within-expert are computed with a per-choice
+running-counter cumsum (``k`` unrolled one-hot cumsums of (T, E) int32) and
+tokens move via scatter-add/gather with a dedicated overflow row — no sort,
+no (T, E, C) dispatch tensor, both of which blow VMEM/HBM at T=64k, E=128.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, ShardCtx, padded_experts
+from repro.models.layers import rmsnorm
+
+Array = jax.Array
+
+
+def expert_capacity(cfg: ArchConfig, n_tokens: int, tp: int) -> int:
+    """Static per-expert capacity, rounded up to a multiple of 8."""
+    ne = padded_experts(cfg, tp)
+    cap = math.ceil(n_tokens * cfg.experts_per_tok / ne * cfg.capacity_factor)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_block(p: dict, cfg: ArchConfig, ctx: ShardCtx,
+              x: Array) -> tuple[Array, Array]:
+    """Pre-norm MoE FFN. x: (B, S, d) -> (residual output, aux loss scalar)."""
+    ne = padded_experts(cfg, ctx.tp)
+    ne_loc = ne // ctx.tp
+    k = cfg.experts_per_tok
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    B, S, d = h.shape
+    T = B * S
+    ht = h.reshape(T, d)
+    C = expert_capacity(cfg, T, ctx.tp)
+
+    # --- routing (identical on every model rank: replicated router, repl. x)
+    logits = (ht @ p["router"].astype(ht.dtype)).astype(jnp.float32)
+    valid = jnp.arange(ne) < cfg.n_experts       # mask padded experts
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)      # (T, E)
+    gate, eidx = jax.lax.top_k(probs, k)         # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux loss: E * sum_e mean(route_e) * mean(p_e)
+    route_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, ne, dtype=jnp.float32), axis=1), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(route_frac * prob_frac)
+
+    # --- dispatch: k unrolled scatter-adds with running per-expert counters
+    e0 = ctx.tp_rank() * ne_loc
+    buf = jnp.zeros((ne_loc * C + 1, d), ht.dtype)   # +1 = overflow row
+    dests, keeps = [], []
+    counts = jnp.zeros((ne,), jnp.int32)
+    for j in range(k):
+        e_j = eidx[:, j]                              # (T,)
+        oh = jax.nn.one_hot(e_j, ne, dtype=jnp.int32)  # (T, E)
+        pos_j = counts[e_j] + (jnp.cumsum(oh, axis=0) - oh)[
+            jnp.arange(T), e_j]
+        counts = counts + jnp.sum(oh, axis=0)
+        local_j = (e_j >= e0) & (e_j < e0 + ne_loc) & (pos_j < C)
+        dest_j = jnp.where(local_j, (e_j - e0) * C + pos_j, ne_loc * C)
+        buf = buf.at[dest_j].add(ht * local_j[:, None].astype(ht.dtype))
+        dests.append(dest_j)
+        keeps.append(local_j)
+
+    # --- expert FFN (SwiGLU) on (ne_loc, C, d)
+    eb = buf[:-1].reshape(ne_loc, C, d)
+    wi = p["experts"]["wi"].astype(ht.dtype)          # (ne_loc, d, 2ff)
+    wo = p["experts"]["wo"].astype(ht.dtype)          # (ne_loc, ff, d)
+    gu = jnp.einsum("ecd,edf->ecf", eb, wi)
+    g_part, u_part = jnp.split(gu, 2, axis=-1)
+    eo = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g_part) * u_part, wo)
+    eo = jnp.concatenate([eo.reshape(ne_loc * C, d),
+                          jnp.zeros((1, d), ht.dtype)], axis=0)
+
+    # --- combine: gather per choice, weight by gate, sum over choices + TP
+    y = jnp.zeros((T, d), ht.dtype)
+    for j in range(k):
+        w_j = (gate[:, j] * keeps[j].astype(jnp.float32)).astype(ht.dtype)
+        y = y + eo[dests[j]] * w_j[:, None]
+    y = ctx.psum_tp(y)
+    return x + y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,176 @@
+"""RWKV6 ("Finch") block: attention-free time-mix with data-dependent decay.
+
+The recurrence per head (k-dim channel c, v-dim channel d):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+is evaluated in **chunked** (sub-quadratic) form — the GLA/Finch chunk
+factorization. With ``cum_t = sum_{j<=t} log w_j`` inside a chunk:
+
+    y_t = (r_t e^{cum_{t-1}}) @ S_0                       (state passthrough)
+        + sum_{s<t} [(r_t e^{cum_{t-1}}) . (k_s e^{-cum_s})] v_s   (intra)
+        + (u . r_t . k_t) v_t                             (bonus diagonal)
+    S_L = diag(e^{cum_L}) S_0 + sum_s (k_s e^{cum_L - cum_s}) v_s^T
+
+Pairs of exponents always telescope to <= 0; the individual ``e^{-cum}``
+factor is kept finite by clamping ``cum >= -CLAMP`` (mass decayed below
+e^-CLAMP is numerically zero anyway). All chunk math is f32.
+
+Work per chunk: O(L^2 * (hd_k + hd_v)) per head -> O(S * L) total:
+sub-quadratic, and the reason rwkv6 runs the ``long_500k`` cell.
+
+TP: r/k/v/g/decay projections are column-parallel by head; the output
+projection is row-parallel (psum). Token-shift ``mu`` and norms replicated.
+
+Simplifications vs the reference implementation (documented in DESIGN.md):
+decay input reuses the k token-shift mix (no dedicated lora), per-head
+GroupNorm on the wkv output is folded into the gate path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, ShardCtx, pad_to
+from repro.models.layers import linear_row, rmsnorm
+
+Array = jax.Array
+
+_CLAMP = 30.0  # |log-decay| cap inside a chunk (e^-30 ~ 1e-13)
+
+
+def rwkv_geometry(cfg: ArchConfig, tp: int) -> tuple[int, int]:
+    """(n_heads padded to tp, head_dim) of the time-mix inner width."""
+    nh = pad_to(cfg.d_model // cfg.ssm_head_dim, tp)
+    return nh, cfg.ssm_head_dim
+
+
+def _token_shift(h: Array, prev: Array | None) -> Array:
+    """x_{t-1} per position; position 0 sees ``prev`` (decode) or zeros."""
+    if h.shape[1] == 1:  # decode fast path
+        p = jnp.zeros_like(h) if prev is None else prev[:, None, :]
+        return p.astype(h.dtype)
+    shifted = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    if prev is not None:
+        shifted = shifted.at[:, 0, :].set(prev.astype(h.dtype))
+    return shifted
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, logw: Array, u: Array,
+                s0: Array, *, chunk: int = 64) -> tuple[Array, Array]:
+    """Chunked WKV. r/k/v/logw: (B,S,H,hd) f32; u: (H,hd); s0: (B,H,hd,hd).
+
+    Returns (y (B,S,H,hd), s_final). logw <= 0.
+    """
+    B, S, H, hd = r.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, v = jnp.pad(r, zp), jnp.pad(v, zp)
+        k = jnp.pad(k, zp)
+        logw = jnp.pad(logw, zp)  # log w = 0 -> w = 1: state untouched
+    n = (S + pad) // L
+
+    def split(x):  # (B, nC, L, H, hd) -> scan over nC
+        return x.reshape(B, n, L, H, hd).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, ws = split(r), split(k), split(v), split(logw)
+
+    def body(s, xs):
+        rc, kc, vc, wc = xs                      # (B, L, H, hd)
+        cum = jnp.cumsum(wc, axis=1)             # inclusive log-decay
+        cum_in = jnp.maximum(cum, -_CLAMP)
+        cum_prev = jnp.maximum(cum - wc, -_CLAMP)
+        rp = rc * jnp.exp(cum_prev)              # r_t * A_{t-1}
+        kp = kc * jnp.exp(-cum_in)               # k_s / A_s
+        att = jnp.einsum("blhc,bmhc->bhlm", rp, kp)
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        att = jnp.where(mask, att, 0.0)
+        bonus = jnp.einsum("hc,blhc,blhc->bhl", u, rc, kc)
+        att = att + jnp.eye(L) * bonus[..., None]
+        y = jnp.einsum("bhlm,bmhd->blhd", att, vc)
+        y = y + jnp.einsum("blhc,bhcd->blhd", rp, s)
+        a_l = cum[:, -1]                          # (B, H, hd) total decay
+        kw = kc * jnp.exp(jnp.maximum(a_l[:, None] - cum_in, -_CLAMP))
+        s = jnp.exp(jnp.maximum(a_l, -_CLAMP))[..., None] * s \
+            + jnp.einsum("blhc,blhd->bhcd", kw, vc)
+        return s, y
+
+    s_fin, ys = jax.lax.scan(body, s0, (rs, ks, vs, ws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S + pad, H, hd)
+    return y[:, :S], s_fin
+
+
+def wkv_step(r: Array, k: Array, v: Array, logw: Array, u: Array,
+             s0: Array) -> tuple[Array, Array]:
+    """Single-token recurrence. r/k/v/logw: (B,H,hd); s0: (B,H,hd,hd)."""
+    kv = k[..., :, None] * v[..., None, :]           # (B,H,hd_k,hd_v)
+    y = jnp.einsum("bhc,bhcd->bhd", r, s0 + u[..., None] * kv)
+    s1 = jnp.exp(logw)[..., None] * s0 + kv
+    return y, s1
+
+
+def rwkv_block(p: dict, cfg: ArchConfig, ctx: ShardCtx, x: Array,
+               state: dict | None = None) -> tuple[Array, dict | None]:
+    """Full RWKV6 block = time-mix + channel-mix. x: (B, S, d).
+
+    state (decode): {"s": (B,H_loc,hd,hd) f32, "tm_prev": (B,d),
+    "cm_prev": (B,d)}. None in train/prefill-from-scratch.
+    """
+    B, S, d = x.shape
+    nh, hd = rwkv_geometry(cfg, ctx.tp)
+    nh_loc = nh // ctx.tp
+
+    # ---- time mix -------------------------------------------------------
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    prev = state["tm_prev"] if state is not None else None
+    hs = _token_shift(h, prev)
+    mu = p["mu"].astype(h.dtype)                     # (4, d)
+    xr, xk, xv, xg = (h + mu[i] * (hs - h) for i in range(4))
+
+    r = (xr @ p["wr"].astype(h.dtype)).reshape(B, S, nh_loc, hd)
+    kk = (xk @ p["wk"].astype(h.dtype)).reshape(B, S, nh_loc, hd)
+    vv = (xv @ p["wv"].astype(h.dtype)).reshape(B, S, nh_loc, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(h.dtype))    # (B, S, dh_loc)
+
+    # data-dependent decay: w = exp(-exp(.)) -> log w = -exp(.) in [-inf, 0)
+    wx = (xk @ p["ww"].astype(h.dtype)).astype(jnp.float32) \
+        + p["w_bias"].astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(wx, -12.0, 3.0)).reshape(B, S, nh_loc, hd)
+    u = p["bonus"].astype(jnp.float32).reshape(nh_loc, hd)
+
+    s0 = (state["s"] if state is not None
+          else jnp.zeros((B, nh_loc, hd, hd), jnp.float32))
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, kk, vv))
+    if S == 1:
+        y1, s1 = wkv_step(rf[:, 0], kf[:, 0], vf[:, 0], logw[:, 0], u, s0)
+        y = y1[:, None]
+    else:
+        y, s1 = wkv_chunked(rf, kf, vf, logw, u, s0)
+    y = (y.reshape(B, S, nh_loc * hd).astype(h.dtype)) * g
+    x = x + linear_row(y, p["wo"], ctx).astype(x.dtype)
+
+    # ---- channel mix ----------------------------------------------------
+    h2 = rmsnorm(x, p["cnorm"], cfg.norm_eps)
+    prev2 = state["cm_prev"] if state is not None else None
+    hs2 = _token_shift(h2, prev2)
+    xin = h2 + p["cmu"].astype(h2.dtype)[0] * (hs2 - h2)
+    kx = jnp.square(jax.nn.relu(xin @ p["ck"].astype(h2.dtype)))
+    x = x + linear_row(kx, p["cv"], ctx).astype(x.dtype)
+
+    new_state = None
+    if state is not None:
+        new_state = {"s": s1, "tm_prev": h[:, -1, :].astype(jnp.float32),
+                     "cm_prev": h2[:, -1, :].astype(jnp.float32)}
+    return x, new_state
+
+
+def init_rwkv_state(cfg: ArchConfig, ctx: ShardCtx, batch: int) -> dict:
+    nh, hd = rwkv_geometry(cfg, ctx.tp)
+    nh_loc = nh // ctx.tp
+    return {"s": jnp.zeros((batch, nh_loc, hd, hd), jnp.float32),
+            "tm_prev": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "cm_prev": jnp.zeros((batch, cfg.d_model), jnp.float32)}

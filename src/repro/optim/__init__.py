@@ -1,0 +1,8 @@
+from repro.optim import schedule
+from repro.optim.optimizers import Optimizer, adamw, make, sgdm
+from repro.optim.schedule import (PAPER_WARMUP_DENSITIES, constant,
+                                  warmup_cosine, warmup_density, wsd)
+
+__all__ = ["schedule", "Optimizer", "adamw", "make", "sgdm", "constant",
+           "warmup_cosine", "warmup_density", "wsd",
+           "PAPER_WARMUP_DENSITIES"]

@@ -1,0 +1,87 @@
+"""Optimizers over flat f32 parameter vectors.
+
+The whole training state is flat (see ``models/flatten.py``) so optimizers
+are purely elementwise — which makes them trivially correct under both
+storage layouts ('dp': replicated vector, 'fsdp': data-sharded vector).
+
+Functional API:
+
+    opt = make("sgdm", lr=schedule_or_float, momentum=0.9, ...)
+    state = opt.init(n)                       # zeros, shaped like params
+    params, state = opt.apply(params, grad, state, step)
+
+``grad`` is the already-aggregated (summed-and-averaged) global gradient.
+SGD+momentum is the paper's optimizer; AdamW is the LM default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Sched = Callable[[Array], Array]
+
+
+def _as_sched(lr) -> Sched:
+    return lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[int], Any]
+    apply: Callable[[Array, Array, Any, Array], tuple[Array, Any]]
+    slots: int  # number of f32 vectors of state (memory accounting)
+
+
+def _zeros(shape):
+    if isinstance(shape, int):
+        shape = (shape,)
+    return jnp.zeros(tuple(shape), jnp.float32)
+
+
+def sgdm(lr=0.1, momentum: float = 0.9, weight_decay: float = 0.0,
+         nesterov: bool = False) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(shape):
+        return _zeros(shape)
+
+    def apply(p, g, m, step):
+        g = g + weight_decay * p if weight_decay else g
+        m = momentum * m + g
+        d = g + momentum * m if nesterov else m
+        return p - sched(step) * d, m
+
+    return Optimizer("sgdm", init, apply, slots=1)
+
+
+def adamw(lr=3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    sched = _as_sched(lr)
+
+    def init(shape):
+        return (_zeros(shape), _zeros(shape))
+
+    def apply(p, g, state, step):
+        m, v = state
+        t = step.astype(jnp.float32) + 1.0
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        upd = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
+        return p - sched(step) * upd, (m, v)
+
+    return Optimizer("adamw", init, apply, slots=2)
+
+
+REGISTRY = {"sgdm": sgdm, "adamw": adamw}
+
+
+def make(name: str, **kw) -> Optimizer:
+    return REGISTRY[name](**kw)

@@ -1,0 +1,66 @@
+"""Learning-rate and compression-density schedules.
+
+All schedules are ``step -> float`` pure functions built from python
+hyper-parameters, jit-safe (step may be a traced int32).
+
+``warmup_density`` reproduces the paper's density warmup for sparsified
+training: "the first 4 epochs use the dynamic densities
+[0.25, 0.0725, 0.015, 0.004]" (Section IV-A) — epoch-indexed density
+stairs that back off the compression while weights are still moving fast.
+``wsd`` is the minicpm-2b warmup-stable-decay schedule.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PAPER_WARMUP_DENSITIES = (0.25, 0.0725, 0.015, 0.004)
+PAPER_WARMUP_LRS = (0.1, 0.03, 0.01)
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def f(step):
+        s = jnp.float32(step)
+        warm = lr * s / max(1, warmup)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos).astype(jnp.float32)
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        min_frac: float = 0.1):
+    """Warmup-Stable-Decay (minicpm): linear warmup, flat, linear decay."""
+    def f(step):
+        s = jnp.float32(step)
+        warm = lr * s / max(1, warmup)
+        prog = jnp.clip((s - warmup - stable) / max(1, decay), 0.0, 1.0)
+        dec = lr * (1.0 - (1.0 - min_frac) * prog)
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, lr, dec)
+                         ).astype(jnp.float32)
+    return f
+
+
+def warmup_density(k_final: int, d: int, steps_per_epoch: int,
+                   densities=PAPER_WARMUP_DENSITIES):
+    """Paper Sec. IV-A: density stairs for the first ``len(densities)`` epochs.
+
+    Returns ``step -> k`` (int32). After the warmup epochs, k = k_final.
+    """
+    ks = [max(1, int(rho * d)) for rho in densities]
+
+    def f(step):
+        epoch = step // max(1, steps_per_epoch)
+        k = jnp.int32(k_final)
+        for i in reversed(range(len(ks))):
+            k = jnp.where(epoch == i, jnp.int32(ks[i]), k)
+        return k
+    return f
+
+
+SCHEDULES = {"constant": constant, "warmup_cosine": warmup_cosine, "wsd": wsd}

@@ -1,0 +1,6 @@
+from repro.runtime.elastic import ElasticPlan, initial_plan, replan
+from repro.runtime.heartbeat import HeartbeatMonitor
+from repro.runtime.straggler import DeadlinePolicy
+
+__all__ = ["ElasticPlan", "initial_plan", "replan", "HeartbeatMonitor",
+           "DeadlinePolicy"]

@@ -1,0 +1,33 @@
+"""Heartbeat-based failure detection (host-side, framework-agnostic).
+
+Each worker process calls ``beat(worker_id)`` on a cadence (e.g. every
+step); the coordinator calls ``dead(timeout)`` between steps and feeds the
+result to ``runtime.elastic.replan``. Pure-python & clock-injectable so the
+tests can simulate failures without real processes; on a real cluster the
+beats would ride the existing coordination channel (e.g. the JAX
+distributed service's KV store).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+class HeartbeatMonitor:
+    def __init__(self, worker_ids, *, clock: Callable[[], float] = time.time):
+        self._clock = clock
+        self._last = {w: clock() for w in worker_ids}
+
+    def beat(self, worker_id) -> None:
+        self._last[worker_id] = self._clock()
+
+    def dead(self, timeout: float) -> set:
+        now = self._clock()
+        return {w for w, t in self._last.items() if now - t > timeout}
+
+    def remove(self, worker_id) -> None:
+        self._last.pop(worker_id, None)
+
+    def add(self, worker_id) -> None:
+        self._last[worker_id] = self._clock()

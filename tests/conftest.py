@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single-CPU device; only launch/dryrun.py forces 512 devices."""
+
+import os
+import sys
+
+# repo root on sys.path so tests can import the benchmarks package
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def simulate_workers(step_fn, n_workers: int, axis_name: str = "data"):
+    """vmap-with-axis-name worker simulator: collective-exact on CPU."""
+    return jax.jit(jax.vmap(step_fn, axis_name=axis_name))
+
+
+def replicate(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)

@@ -1,0 +1,146 @@
+"""Compressor zoo under vmap-simulated workers: contracts and semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as comp
+from repro.core import count_sketch as cs
+
+D, P, K = 4096, 4, 256
+
+
+def _grads(seed=0, p=P, d=D):
+    return jax.random.normal(jax.random.PRNGKey(seed), (p, d))
+
+
+def _run_step(compressor, g, state=None, include=None):
+    if state is None:
+        state = jax.vmap(lambda _: compressor.init(g.shape[1]))(
+            jnp.arange(g.shape[0]))
+
+    def step(s, gg, inc):
+        kw = {"include": inc} if include is not None else {}
+        return compressor.step(s, gg, axis="data", nworkers=g.shape[0], **kw)
+
+    inc = include if include is not None else jnp.ones((g.shape[0],))
+    upd, new_state, _ = jax.vmap(step, axis_name="data")(state, g, inc)
+    return upd, new_state
+
+
+def test_dense_equals_sum():
+    g = _grads()
+    upd, _ = _run_step(comp.make("dense"), g)
+    np.testing.assert_allclose(np.asarray(upd[0]),
+                               np.asarray(jnp.sum(g, 0)), rtol=1e-5)
+
+
+def test_all_workers_get_identical_update():
+    for name in ["dense", "topk", "gtopk", "sketched-sgd", "gs-sgd"]:
+        kw = {"k": K} if name != "dense" else {}
+        g = _grads(1)
+        upd, _ = _run_step(comp.make(name, **kw), g)
+        for w in range(1, P):
+            np.testing.assert_allclose(np.asarray(upd[0]),
+                                       np.asarray(upd[w]), rtol=0, atol=0,
+                                       err_msg=name)
+
+
+def test_gs_sgd_applied_coords_are_exact():
+    """Alg. 2 line 4: selected coordinates carry the EXACT dp-summed value."""
+    g = _grads(2)
+    upd, _ = _run_step(comp.make("gs-sgd", k=K), g)
+    true_sum = jnp.sum(g, 0)
+    nz = np.nonzero(np.asarray(upd[0]))[0]
+    assert 0 < len(nz) <= K
+    np.testing.assert_allclose(np.asarray(upd[0])[nz],
+                               np.asarray(true_sum)[nz], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_gs_sgd_ef_bookkeeping():
+    """acc' + applied-per-worker == u (no gradient mass lost or invented)."""
+    g = _grads(3)
+    c = comp.make("gs-sgd", k=K)
+    state = jax.vmap(lambda _: c.init(D))(jnp.arange(P))
+    upd, new_state = _run_step(c, g, state)
+    # u_p = 0 + g_p; residual acc'_p = u_p off the selected set
+    sel = np.nonzero(np.asarray(upd[0]))[0]
+    for w in range(P):
+        acc = np.asarray(new_state[w])
+        u = np.asarray(g[w])
+        mask = np.zeros(D, bool)
+        mask[sel] = True
+        np.testing.assert_allclose(acc[~mask], u[~mask], rtol=1e-6)
+        np.testing.assert_allclose(acc[mask], 0.0, atol=1e-6)
+
+
+def test_gs_sgd_tree_equals_psum_mode():
+    g = _grads(4)
+    sk = dict(k=K, rows=5, width=4096)
+    u1, _ = _run_step(comp.make("gs-sgd", allreduce_mode="psum", **sk), g)
+    u2, _ = _run_step(comp.make("gs-sgd", allreduce_mode="tree", **sk), g)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_gs_sgd_matches_sketched_sgd_update():
+    """Same sketch geometry + same inputs -> the decentralized (gs-SGD) and
+    PS-emulated (Sketched-SGD) aggregations are numerically identical; the
+    paper's win is communication structure, not different math."""
+    g = _grads(5)
+    sk = dict(k=K, rows=5, width=4096)
+    u1, _ = _run_step(comp.make("gs-sgd", **sk), g)
+    u2, _ = _run_step(comp.make("sketched-sgd", **sk), g)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_gs_sgd_straggler_drop_unbiased():
+    """Dropped worker: sketch excluded, rescale P/live, residual keeps all."""
+    g = _grads(6)
+    c = comp.make("gs-sgd", k=K)
+    include = jnp.array([1.0, 1.0, 1.0, 0.0])  # worker 3 straggles
+    state = jax.vmap(lambda _: c.init(D))(jnp.arange(P))
+    upd, new_state = _run_step(c, g, state, include=include)
+    sel = np.nonzero(np.asarray(upd[0]))[0]
+    live_sum = np.asarray(jnp.sum(g[:3], 0))
+    np.testing.assert_allclose(np.asarray(upd[0])[sel],
+                               live_sum[sel] * (4 / 3), rtol=1e-4, atol=1e-4)
+    # straggler keeps its ENTIRE update for next step
+    np.testing.assert_allclose(np.asarray(new_state[3]), np.asarray(g[3]),
+                               rtol=1e-6)
+
+
+def test_topk_and_gtopk_sparsity():
+    for name in ["topk", "gtopk"]:
+        g = _grads(7)
+        upd, _ = _run_step(comp.make(name, k=K), g)
+        nnz = int(jnp.sum(upd[0] != 0))
+        cap = K * P if name == "topk" else K
+        assert 0 < nnz <= cap, (name, nnz)
+
+
+def test_comm_stats_scaling():
+    """Eq. 1: gs-SGD comm is O(log d * log P) vs O(log d * P) for the PS."""
+    gs = comp.make("gs-sgd", k=8, allreduce_mode="tree")
+    ps = comp.make("sketched-sgd", k=8)
+
+    def probe(c, p):
+        out = {}
+
+        def step(s, gg):
+            u, st, stats = c.step(s, gg, axis="data", nworkers=p)
+            out["stats"] = stats
+            return u, st
+
+        jax.vmap(step, axis_name="data")(
+            jnp.zeros((p, 64)), jnp.zeros((p, 64)))
+        return out["stats"]
+
+    t4, t8 = probe(gs, 4), probe(gs, 8)
+    p4, p8 = probe(ps, 4), probe(ps, 8)
+    assert t8.rounds - t4.rounds == 2             # +1 tree level (down + up)
+    assert p8.bytes_out / p4.bytes_out > 1.8      # PS volume scales ~P
+    assert t8.bytes_out / t4.bytes_out < 1.8      # tree volume scales ~log P

@@ -1,0 +1,146 @@
+"""Count-Sketch structure: linearity, estimates, merging, hash invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import count_sketch as cs
+
+CFG = cs.SketchConfig(rows=5, width=512, seed=3)
+
+
+def test_width_rounds_to_pow2():
+    assert cs.SketchConfig(width=1000).width == 1024
+    assert cs.SketchConfig(width=512).width == 512
+
+
+def test_hash_params_deterministic_and_rank_free():
+    # identical (seed, rows) -> identical hashes; different seed -> different
+    a = cs.SketchConfig(rows=5, width=512, seed=3).hash_params
+    b = cs.SketchConfig(rows=5, width=512, seed=3).hash_params
+    c = cs.SketchConfig(rows=5, width=512, seed=4).hash_params
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_buckets_in_range_signs_pm1():
+    idx = jnp.arange(10000)
+    buckets, signs = cs.hash_buckets(CFG, idx)
+    assert buckets.shape == (5, 10000)
+    assert int(buckets.min()) >= 0 and int(buckets.max()) < CFG.width
+    assert set(np.unique(np.asarray(signs))) <= {-1.0, 1.0}
+
+
+def test_linearity():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4096,))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (4096,))
+    sa, sb, sab = cs.encode(CFG, a), cs.encode(CFG, b), cs.encode(CFG, a + b)
+    np.testing.assert_allclose(np.asarray(sa + sb), np.asarray(sab),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_merge_equals_sum_of_parts():
+    key = jax.random.PRNGKey(1)
+    parts = [jax.random.normal(jax.random.fold_in(key, i), (2048,))
+             for i in range(7)]  # 7 workers: odd, non-power-of-two
+    merged = cs.merge(*[cs.encode(CFG, p) for p in parts])
+    direct = cs.encode(CFG, sum(parts))
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(direct),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_recovers_heavy_coordinate():
+    g = jnp.zeros(8192).at[1234].set(100.0)
+    g = g + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (8192,))
+    est = cs.decode(CFG, cs.encode(CFG, g), 8192)
+    assert abs(float(est[1234]) - 100.0) < 5.0
+    assert int(jnp.argmax(jnp.abs(est))) == 1234
+
+
+def test_decode_error_bound():
+    # Count-Sketch guarantee: |est - g_i| <= eps*||g||_2 w.h.p.
+    key = jax.random.PRNGKey(3)
+    g = jax.random.normal(key, (4096,))
+    est = cs.decode(CFG, cs.encode(CFG, g), 4096)
+    err = jnp.abs(est - g)
+    l2 = float(jnp.linalg.norm(g))
+    # median-of-5 rows, width 512: eps ~ sqrt(2/512) ~ 0.06; allow slack
+    assert float(jnp.quantile(err, 0.99)) < 0.25 * l2
+    assert float(jnp.median(err)) < 0.1 * l2
+
+
+def test_decode_chunked_matches_flat():
+    d = (1 << 20) + 12345  # force the chunked path with a ragged tail
+    g = jax.random.normal(jax.random.PRNGKey(4), (d,))
+    small = cs.decode(CFG, cs.encode(CFG, g), d)
+    # flat reference on the same sketch via direct hashing of all coords
+    buckets, signs = cs.hash_buckets(CFG, jnp.arange(d))
+    sk = cs.encode(CFG, g)
+    flat = jnp.median(jnp.take_along_axis(sk, buckets, axis=1) * signs, 0)
+    np.testing.assert_allclose(np.asarray(small), np.asarray(flat),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_encode_chunked_matches_small_path():
+    d = (1 << 20) + 777
+    g = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    # small path forced by encoding in one piece under the chunk limit:
+    # split manually and merge (linearity) as the reference
+    ref = cs.merge(cs.encode(CFG, g[:1 << 19]),
+                   cs.encode(CFG, jnp.pad(g[1 << 19:], (1 << 19, 0))))
+    # padding shifts indices — instead compare against per-half encodes of
+    # index-aligned vectors: zero-extended halves
+    a = jnp.zeros(d).at[:1 << 19].set(g[:1 << 19])
+    b = jnp.zeros(d).at[1 << 19:].set(g[1 << 19:])
+    ref = cs.encode(CFG, a) + cs.encode(CFG, b)
+    out = cs.encode(CFG, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_l2_estimate():
+    g = jax.random.normal(jax.random.PRNGKey(6), (8192,))
+    est = float(cs.l2sq_estimate(cs.encode(CFG, g)))
+    true = float(jnp.sum(g * g))
+    assert 0.5 * true < est < 2.0 * true
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=5000),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_linearity_any_shape(d, seed):
+    cfg = cs.SketchConfig(rows=3, width=256, seed=7)
+    key = jax.random.PRNGKey(seed % (2**31))
+    a = jax.random.normal(key, (d,))
+    b = jax.random.normal(jax.random.fold_in(key, 9), (d,))
+    lhs = cs.encode(cfg, a) + cs.encode(cfg, b)
+    rhs = cs.encode(cfg, a + b)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False), min_size=1, max_size=64))
+def test_property_single_heavy_recovery(vals):
+    """Whatever the tail, a coordinate 50x the tail l2 is recovered."""
+    d = 4096
+    g = jnp.zeros(d).at[:len(vals)].set(jnp.asarray(vals, jnp.float32))
+    tail = float(jnp.linalg.norm(g))
+    g = g.at[2049].set(max(50.0 * tail, 100.0))
+    est = cs.decode(CFG, cs.encode(CFG, g), d)
+    assert int(jnp.argmax(jnp.abs(est))) == 2049
+
+
+def test_ravel_unravel_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": (jnp.ones(4), jnp.zeros((2, 2), jnp.float32))}
+    flat, info = cs.ravel_tree(tree)
+    back = cs.unravel_tree(flat, info)
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        tree, back)

@@ -1,0 +1,71 @@
+"""Data pipeline: determinism, shard consistency, elastic re-sharding."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import ImageStream, LMStream
+
+
+def test_lm_deterministic_per_step():
+    s = LMStream(vocab_size=100, seq_len=16, global_batch=8, seed=1)
+    a = s.global_batch_at(5)
+    b = s.global_batch_at(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = s.global_batch_at(6)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+def test_lm_labels_are_shifted_tokens():
+    s = LMStream(vocab_size=50, seq_len=12, global_batch=4)
+    b = s.global_batch_at(0)
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_shard_matches_global_slice():
+    s = LMStream(vocab_size=100, seq_len=8, global_batch=12, seed=2)
+    g = s.global_batch_at(3)
+    for n_shards in (2, 3, 4, 6):
+        per = 12 // n_shards
+        for r in range(n_shards):
+            sh = s.shard_at(3, r, n_shards)
+            np.testing.assert_array_equal(
+                np.asarray(sh["tokens"]),
+                np.asarray(g["tokens"][r * per:(r + 1) * per]))
+
+
+def test_elastic_reshard_preserves_global_stream():
+    """Re-sharding at a different P partitions the SAME global batch."""
+    s = LMStream(vocab_size=100, seq_len=8, global_batch=12, seed=3)
+    all_4 = np.concatenate([np.asarray(s.shard_at(7, r, 4)["tokens"])
+                            for r in range(4)])
+    all_3 = np.concatenate([np.asarray(s.shard_at(7, r, 3)["tokens"])
+                            for r in range(3)])
+    np.testing.assert_array_equal(all_4, all_3)
+
+
+def test_lm_stream_is_learnable():
+    """Next token is mostly a deterministic function of the current one."""
+    s = LMStream(vocab_size=100, seq_len=64, global_batch=8, seed=4)
+    b = s.global_batch_at(0)
+    t = np.asarray(b["tokens"])
+    nxt = np.asarray(b["labels"])
+    pred = (t * 31 + 17) % 100
+    agree = float((pred == nxt).mean())
+    assert agree > 0.8  # 10% noise injected
+
+
+def test_image_stream():
+    s = ImageStream(global_batch=16, seed=5)
+    b = s.global_batch_at(2)
+    assert b["images"].shape == (16, 32, 32, 3)
+    assert b["labels"].shape == (16,)
+    sh = s.shard_at(2, 1, 4)
+    np.testing.assert_array_equal(np.asarray(sh["images"]),
+                                  np.asarray(b["images"][4:8]))
+    # class means differ (learnable signal)
+    b2 = s.global_batch_at(3)
+    assert not np.array_equal(np.asarray(b["images"]),
+                              np.asarray(b2["images"]))

@@ -1,0 +1,117 @@
+"""End-to-end distributed-training integration (vmap-simulated workers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.gs_sgd import MeshAxes, make_state, make_train_step
+from repro.data import LMStream
+from repro.models.flatten import init_flat_params
+from repro.optim import make as make_opt
+
+CFG = SMOKES["qwen3-4b"]
+P, B, S = 4, 2, 32
+
+
+def _run(compressor, steps=12, seed=0, **ckw):
+    opt = make_opt("adamw", lr=2e-3)
+    ma = MeshAxes(tp=1, data=P, tp_axis=None, data_axis="data")
+    ts = make_train_step(CFG, ma, opt, dp_mode="dp",
+                         compressor_name=compressor,
+                         compressor_kw=ckw or None,
+                         remat=False, dtype=jnp.float32)
+    params = init_flat_params(CFG, jax.random.PRNGKey(seed), 1, ts.fs)
+    st = make_state(params, opt, ts.compressor, ts.d_local)
+    st = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (P,) + a.shape), st)
+    fn = jax.jit(jax.vmap(ts.fn, axis_name="data"))
+    stream = LMStream(vocab_size=CFG.vocab_size, seq_len=S,
+                      global_batch=P * B, seed=7)
+    losses = []
+    for i in range(steps):
+        gb = stream.global_batch_at(i)
+        batch = jax.tree_util.tree_map(
+            lambda a: a.reshape((P, B) + a.shape[1:]), gb)
+        st, m = fn(st, batch)
+        losses.append(float(m["loss"][0]))
+    return losses, st
+
+
+def test_gs_sgd_converges_on_learnable_stream():
+    losses, st = _run("gs-sgd", k=4096, rows=5, width=8192)
+    assert losses[-1] < losses[0] - 0.1
+    for v in st["params"].values():  # replicas never diverge
+        assert float(jnp.max(jnp.abs(v - v[0:1]))) == 0.0
+
+
+def test_gs_sgd_tracks_dense_baseline():
+    """Compression with EF makes real progress relative to dense.
+
+    At k/d ~ 4% over just 12 steps the EF-lagged trajectory legitimately
+    trails dense (the paper's own curves converge over epochs); require a
+    substantial fraction of the dense progress, not parity.
+    """
+    dense, _ = _run("dense", steps=12)
+    gssgd, _ = _run("gs-sgd", steps=12, k=4096, rows=5, width=8192)
+    dense_gain = dense[0] - dense[-1]
+    gs_gain = gssgd[0] - gssgd[-1]
+    assert gs_gain > 0.25 * dense_gain, (gs_gain, dense_gain)
+
+
+def test_all_compressors_run_and_learn():
+    for name, kw in [("gtopk", dict(k=2048)), ("topk", dict(k=2048)),
+                     ("sketched-sgd", dict(k=4096, rows=5, width=8192))]:
+        losses, st = _run(name, steps=8, **kw)
+        assert losses[-1] < losses[0], name
+        for v in st["params"].values():
+            assert float(jnp.max(jnp.abs(v - v[0:1]))) == 0.0, name
+
+
+def test_fsdp_mode_matches_dp_single_pod():
+    """fsdp (data-sharded storage, gather-per-cycle) == dp numerically."""
+    cfg = SMOKES["yi-9b"]
+    opt = make_opt("sgdm", lr=5e-2, momentum=0.9)
+    ma = MeshAxes(tp=1, data=P, tp_axis=None, data_axis="data")
+    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=16,
+                      global_batch=P * B, seed=9)
+
+    results = {}
+    for mode in ("dp", "fsdp"):
+        ts = make_train_step(cfg, ma, opt, dp_mode=mode,
+                             compressor_name=None, remat=False,
+                             dtype=jnp.float32)
+        params = init_flat_params(cfg, jax.random.PRNGKey(0), 1, ts.fs)
+        st = make_state(params, opt, None, ts.d_local)
+        st = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (P,) + a.shape), st)
+        if mode == "fsdp":  # shard storage over the data axis
+            def shard(a):
+                if a.ndim == 1 or a.shape[0] != P:
+                    return a
+                per = a.shape[-1] // P
+                return jnp.stack([a[r][..., r * per:(r + 1) * per]
+                                  for r in range(P)])
+            st = {"params": {k: shard(v) for k, v in st["params"].items()},
+                  "opt": jax.tree_util.tree_map(shard, st["opt"]),
+                  "ef": st["ef"], "step": st["step"]}
+        fn = jax.jit(jax.vmap(ts.fn, axis_name="data"))
+        losses = []
+        for i in range(3):
+            gb = stream.global_batch_at(i)
+            batch = jax.tree_util.tree_map(
+                lambda a: a.reshape((P, B) + a.shape[1:]), gb)
+            st, m = fn(st, batch)
+            losses.append(float(m["loss"][0]))
+        results[mode] = losses
+    np.testing.assert_allclose(results["dp"], results["fsdp"], rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_wire_dtype_bf16_close_to_f32():
+    """Beyond-paper knob: bf16 sketch wire halves bytes, barely moves loss."""
+    f32, _ = _run("gs-sgd", steps=8, k=4096, width=8192)
+    bf16, _ = _run("gs-sgd", steps=8, k=4096, width=8192,
+                   wire_dtype=jnp.bfloat16)
+    assert abs(bf16[-1] - f32[-1]) < 0.15 * abs(f32[0] - f32[-1]) + 0.02

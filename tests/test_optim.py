@@ -1,0 +1,81 @@
+"""Optimizers and schedules."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, constant, make, sgdm, warmup_cosine,
+                         warmup_density, wsd)
+from repro.optim.schedule import PAPER_WARMUP_DENSITIES
+
+
+def test_sgdm_matches_manual():
+    opt = sgdm(lr=0.1, momentum=0.9)
+    p = jnp.array([1.0, -2.0])
+    g = jnp.array([0.5, 0.5])
+    m = opt.init(2)
+    p1, m1 = opt.apply(p, g, m, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(m1), [0.5, 0.5])
+    np.testing.assert_allclose(np.asarray(p1), [1.0 - 0.05, -2.0 - 0.05])
+    p2, m2 = opt.apply(p1, g, m1, jnp.int32(1))
+    np.testing.assert_allclose(np.asarray(m2), 0.9 * 0.5 + 0.5)
+
+
+def test_sgdm_weight_decay_and_nesterov():
+    opt = sgdm(lr=0.1, momentum=0.9, weight_decay=0.1, nesterov=True)
+    p = jnp.ones(3)
+    g = jnp.zeros(3)
+    p1, _ = opt.apply(p, g, opt.init(3), jnp.int32(0))
+    assert float(p1[0]) < 1.0  # decay pulls toward 0 even with zero grad
+
+
+def test_adamw_bias_correction_first_step():
+    opt = adamw(lr=1e-3, b1=0.9, b2=0.999, weight_decay=0.0)
+    p = jnp.zeros(4)
+    g = jnp.full(4, 0.3)
+    p1, _ = opt.apply(p, g, opt.init(4), jnp.int32(0))
+    # bias-corrected first step == -lr * g/|g| (approx, eps tiny)
+    np.testing.assert_allclose(np.asarray(p1), -1e-3, rtol=1e-3)
+
+
+def test_adamw_2d_state():
+    opt = adamw()
+    st = opt.init((3, 5))
+    assert st[0].shape == (3, 5) and st[1].shape == (3, 5)
+
+
+def test_make_registry():
+    assert make("sgdm").name == "sgdm"
+    assert make("adamw").name == "adamw"
+    with pytest.raises(KeyError):
+        make("lion")
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, warmup=10, total=110)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 0.11
+    assert float(f(5)) == pytest.approx(0.5)
+    assert float(f(110)) == pytest.approx(0.1, abs=0.02)  # min_frac floor
+
+
+def test_wsd_shape():
+    f = wsd(1.0, warmup=10, stable=50, decay=40, min_frac=0.1)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == 1.0
+    assert float(f(59)) == 1.0                       # stable plateau
+    assert 0.1 <= float(f(99)) < 1.0                 # decaying
+    assert float(f(100)) == pytest.approx(0.1)
+
+
+def test_constant():
+    assert float(constant(0.3)(123)) == pytest.approx(0.3)
+
+
+def test_paper_density_warmup_stairs():
+    d = 100_000
+    f = warmup_density(k_final=400, d=d, steps_per_epoch=10)
+    for epoch, rho in enumerate(PAPER_WARMUP_DENSITIES):
+        k = int(f(epoch * 10 + 3))
+        assert k == max(1, int(rho * d)), (epoch, k)
+    assert int(f(45)) == 400  # after warmup: k_final
