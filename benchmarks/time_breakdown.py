@@ -51,6 +51,13 @@ def _time(f, *args, n=5):
     return (time.time() - t0) / n
 
 
+def hbm_encode_time(d: int, rows: int, hbm: float = HBM_BW) -> float:
+    """Sketch-encode compute stage priced at HBM streaming: read+write
+    (8 B) per coordinate per row — the Pallas-kernel regime. Shared by the
+    bucketed-overlap models here and in comm_model.py."""
+    return d * rows * 8 / hbm
+
+
 def paper_geometry(d: int) -> tuple[int, int]:
     """Paper-regime sparsity: k = 0.4% of d (Sec. IV-A final density);
     sketch width ~ k/2 so the sketch payload undercuts gTop-k's per-round
@@ -75,8 +82,10 @@ def breakdown(model: str, method: str, *, P=4, k=None, width=None,
     grad_fn = jax.jit(jax.grad(
         lambda p: cnn.ce_loss(apply(p, imgs), labs)))
     t_compu = _time(grad_fn, p0)
-    fwd_flops = jax.jit(grad_fn).lower(p0).compile().cost_analysis().get(
-        "flops", 0.0)
+    ca = jax.jit(grad_fn).lower(p0).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x returns [dict]
+        ca = ca[0] if ca else {}
+    fwd_flops = (ca or {}).get("flops", 0.0)
     t_compu_model = max(fwd_flops / ACCEL_FLOPS, 1e-5)
 
     # ---- t_compr -----------------------------------------------------------
@@ -91,7 +100,7 @@ def breakdown(model: str, method: str, *, P=4, k=None, width=None,
         enc = jax.jit(lambda v: cs.encode(c.sketch, v))
         t_compr = _time(enc, g, n=n_rep)
         # accelerator: stream d coords x rows, read+write
-        t_compr_model = d * c.sketch.rows * 8 / HBM_BW
+        t_compr_model = hbm_encode_time(d, c.sketch.rows)
     else:
         # gTop-k re-sparsifies the full-length merged vector once per tree
         # round (sequential, on the critical path — our GTopK._sparsify
@@ -120,6 +129,56 @@ def breakdown(model: str, method: str, *, P=4, k=None, width=None,
             "d": d}
 
 
+def model_bucket_pipeline(d: int, n_buckets: int, *, P: int = 4,
+                          k: int | None = None, width: int | None = None,
+                          rows: int = 5, alpha: float = ALPHA_1GBE,
+                          beta: float = BETA_1GBE, hbm: float = HBM_BW,
+                          t_backward: float = 0.0) -> dict:
+    """Per-bucket CommStats + modeled comm/compute-overlap saving.
+
+    Prices the bucketed gs-SGD exchange (DESIGN.md §5) on the paper's Eq. 1
+    cost model as a 3-stage pipeline per bucket:
+
+      ready  — backward produces bucket i's gradient at (i+1)/N of
+               ``t_backward`` (buckets in gradient-production order);
+      encode — HBM-streaming sketch encode (d_b * rows reads+writes);
+      comm   — the bucket's sketch all-reduce + second round (Eq. 1).
+
+    Monolithic/serial = backward, then encode, then comm back-to-back.
+    Pipelined: bucket i's comm runs while backward is still producing
+    bucket i+1's gradients and while bucket i+1 encodes. Saving is 0 at
+    n_buckets=1 by construction and strictly positive once a second bucket
+    exists to hide behind.
+
+    t_backward=0 (default) models exactly what the SHIPPED schedule in
+    ``core/gs_sgd.exchange_bucketed`` can hide (the 2-stage
+    ``compression.overlap_schedule_time`` recurrence: comm behind the next
+    bucket's encode, after accumulation completes). t_backward>0 adds
+    per-layer bucket readiness — an UPPER BOUND for the future
+    backward-interleaved schedule (ROADMAP open item), not the current
+    post-accumulation implementation.
+    """
+    if k is None or width is None:
+        k, width = paper_geometry(d)
+    base = comp.make("gs-sgd", k=k, rows=rows, width=width)
+    bc = comp.bucketize(base, comp.even_bucket_sizes(d, n_buckets))
+    n = bc.spec.n
+    per, t_enc, t_comm = [], [], []
+    for c, db in zip(bc.parts, bc.spec.sizes):
+        stats = c.comm_stats(db, P)
+        per.append({"d": db, "k": c.k, "width": c.sketch.width,
+                    "bytes": stats.bytes_out, "rounds": stats.rounds,
+                    "t_comm": stats.time(alpha, beta)})
+        t_enc.append(hbm_encode_time(db, c.sketch.rows, hbm=hbm))
+        t_comm.append(stats.time(alpha, beta))
+    ready = [(i + 1) * t_backward / n for i in range(n)]
+    serial, pipelined = comp.overlap_schedule_time(t_enc, t_comm,
+                                                   ready=ready)
+    return {"n_buckets": n, "per_bucket": per,
+            "t_serial": serial, "t_pipelined": pipelined,
+            "overlap_saving": serial - pipelined}
+
+
 def main() -> dict:
     results = {}
     for model in ("resnet20", "vgg16"):
@@ -138,6 +197,26 @@ def main() -> dict:
                   f"{r['t_compr'] * 1e3:7.1f} commu {r['t_commu'] * 1e3:6.1f}"
                   f" tot {tot * 1e3:7.1f}ms | accel-modeled tot "
                   f"{tot_m * 1e3:6.1f}ms")
+        # bucketed gs-sgd: per-bucket CommStats + modeled overlap saving.
+        # 'shipped' = the post-accumulation encode/comm pipeline we run;
+        # 'readiness bound' = the same buckets with per-layer gradient
+        # readiness (future backward-interleaved schedule, ROADMAP item).
+        d = per["gs-sgd"]["d"]
+        tb = per["gs-sgd"]["t_compu_model"]  # accel-modeled fwd+bwd
+        per["bucketed"] = {}
+        for n_b in (1, 4, 8):
+            r = model_bucket_pipeline(d, n_b)
+            bound = model_bucket_pipeline(d, n_b, t_backward=tb)
+            r["readiness_bound"] = {k: bound[k] for k in
+                                    ("t_serial", "t_pipelined",
+                                     "overlap_saving")}
+            per["bucketed"][str(n_b)] = r
+            print(f"{model:9s} gs-sgd x{r['n_buckets']:<2d} buckets: "
+                  f"serial {r['t_serial'] * 1e3:6.2f}ms pipelined "
+                  f"{r['t_pipelined'] * 1e3:6.2f}ms saving "
+                  f"{r['overlap_saving'] * 1e3:6.3f}ms (readiness bound "
+                  f"{bound['overlap_saving'] * 1e3:6.3f}ms) | per-bucket "
+                  f"bytes {[int(b['bytes']) for b in r['per_bucket']]}")
         results[model] = per
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "time_breakdown.json"), "w") as f:

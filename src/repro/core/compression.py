@@ -270,18 +270,24 @@ class GsSGD(_SketchBased):
     wire_dtype: Any = jnp.float32
     name: str = "gs-sgd"
 
-    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
-             key: Array | None = None, include: Array | None = None):
-        """include: () bool — straggler drop-mask (True = my sketch counts).
+    # The step is exposed as three pipeline stages so the bucket scheduler
+    # in ``core/gs_sgd.py`` can interleave bucket i's all-reduce with bucket
+    # i+1's encode. ``step`` composes them — single source of the numerics.
 
-        When a worker is excluded its sketch contributes zero (linearity
-        makes the merged sketch exact for the live subset), the sum is
-        rescaled by P/live, and the excluded worker keeps its FULL update
-        in the error-feedback accumulator for the next step.
-        """
+    def stage_encode(self, acc: Array, g: Array) -> tuple[Array, Array]:
+        """Stage 1 (compute): EF add + local Count-Sketch encode."""
         u = ef.add(acc, g)
-        d = u.shape[0]
-        sk = self._encode(u).astype(self.wire_dtype)
+        return u, self._encode(u).astype(self.wire_dtype)
+
+    def stage_reduce(self, sk: Array, *, axis: AxisNames, nworkers: int,
+                     include: Array | None = None):
+        """Stage 2 (communication): merge the linear sketches over workers.
+
+        include: () bool — straggler drop-mask (True = my sketch counts).
+        An excluded worker's sketch contributes zero (linearity makes the
+        merged sketch exact for the live subset); returns the P/live
+        rescale for the unbiased full-P estimate (None without a mask).
+        """
         scale = None
         if include is not None:
             include = include.astype(jnp.float32)
@@ -290,12 +296,25 @@ class GsSGD(_SketchBased):
             sk = sk * include.astype(sk.dtype)
         sk_sum = ar.allreduce(sk, axis, nworkers,
                               mode=self.allreduce_mode).astype(jnp.float32)
+        return sk_sum, scale
+
+    def stage_recover(self, u: Array, sk_sum: Array, scale, *,
+                      axis: AxisNames, nworkers: int,
+                      key: Array | None = None,
+                      include: Array | None = None):
+        """Stage 3: HEAVYMIX + exact second round + EF residual update."""
+        d = u.shape[0]
+        inc = include.astype(jnp.float32) if include is not None else None
         upd, idx = self._recover(sk_sum, u, d, axis=axis, key=key,
-                                 include=include, scale=scale)
+                                 include=inc, scale=scale)
         if include is None:
             acc = ef.residual_global(u, idx)
         else:  # dropped workers keep their entire update for next step
-            acc = jnp.where(include > 0, ef.residual_global(u, idx), u)
+            acc = jnp.where(inc > 0, ef.residual_global(u, idx), u)
+        return upd, acc, self.comm_stats(d, nworkers)
+
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        """Static wire model of one step (also used by the benchmarks)."""
         wire = jnp.dtype(self.wire_dtype).itemsize
         if self.allreduce_mode == "tree":
             rounds = ar.tree_allreduce_rounds(nworkers)
@@ -303,9 +322,16 @@ class GsSGD(_SketchBased):
         else:
             rounds = 2 * (nworkers - 1)
             sk_bytes = _ring_allreduce_bytes(self.sketch.size * wire, nworkers)
-        stats = CommStats(sk_bytes + self.k * _F32, rounds=rounds + 2,
-                          label=self.name)
-        return upd, acc, stats
+        return CommStats(sk_bytes + self.k * _F32, rounds=rounds + 2,
+                         label=self.name)
+
+    def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None, include: Array | None = None):
+        u, sk = self.stage_encode(acc, g)
+        sk_sum, scale = self.stage_reduce(sk, axis=axis, nworkers=nworkers,
+                                          include=include)
+        return self.stage_recover(u, sk_sum, scale, axis=axis,
+                                  nworkers=nworkers, key=key, include=include)
 
 
 @jax.tree_util.register_static
@@ -420,6 +446,188 @@ class PowerSGD:
             _ring_allreduce_bytes(self.rank * (m + n) * _F32, nworkers),
             rounds=4 * (nworkers - 1), label=self.name)
         return approx, (acc, q_new), stats
+
+
+# ---------------------------------------------------------------------------
+# Bucketed compression (comm/compute-overlap pipeline; see DESIGN.md §5).
+#
+# The flat gradient is split into contiguous buckets at FlatSpec segment
+# boundaries (``models.flatten.bucket_sizes``); each bucket gets its own
+# compressor instance with proportionally scaled geometry and its own EF
+# state. Buckets touch disjoint coordinate ranges, so their exchange chains
+# are independent — the property the overlap scheduler in ``core/gs_sgd.py``
+# exploits. With a single bucket the wrapper degenerates to the base
+# compressor exactly (same geometry, same numerics).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Static contiguous partition of a flat d-vector."""
+
+    sizes: tuple[int, ...]
+
+    @property
+    def n(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        out, off = [], 0
+        for s in self.sizes:
+            out.append(off)
+            off += s
+        return tuple(out)
+
+    def split(self, g: Array) -> list[Array]:
+        return [jax.lax.slice_in_dim(g, o, o + s)
+                for o, s in zip(self.offsets, self.sizes)]
+
+    def join(self, parts) -> Array:
+        return jnp.concatenate(list(parts))
+
+
+def even_bucket_sizes(d: int, n: int) -> tuple[int, ...]:
+    """~Equal split for callers without FlatSpec boundaries (benchmarks)."""
+    n = max(1, min(int(n), int(d)))
+    base, rem = divmod(int(d), n)
+    return tuple(base + (1 if i < rem else 0) for i in range(n))
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class BucketedCommStats:
+    """Per-bucket CommStats plus the aggregate view benchmarks consume."""
+
+    per_bucket: tuple[CommStats, ...]
+    label: str = "bucketed"
+
+    @property
+    def bytes_out(self) -> float:
+        return sum(s.bytes_out for s in self.per_bucket)
+
+    @property
+    def rounds(self) -> int:
+        return sum(s.rounds for s in self.per_bucket)
+
+    def time(self, alpha: float, beta: float) -> float:
+        """Serial (non-overlapped) Eq.1 time: buckets exchanged back-to-back.
+
+        For the overlapped schedule, feed per-bucket times into
+        ``overlap_schedule_time`` (as the benchmarks do)."""
+        return sum(s.time(alpha, beta) for s in self.per_bucket)
+
+
+def overlap_schedule_time(t_compute, t_comm,
+                          ready=None) -> tuple[float, float]:
+    """(serial, pipelined) totals for the encode->comm bucket pipeline.
+
+    Serial = all stages back-to-back. Pipelined: bucket i's encode starts
+    once its input is ready and the previous encode finished; its comm
+    starts when both its encode and bucket i-1's comm have finished — the
+    classic pipeline recurrence. The saving is 0 for a single bucket.
+
+    ready: optional per-bucket gradient-readiness times (monotone
+    nondecreasing, e.g. (i+1)/N of backward) for modeling a
+    backward-interleaved schedule; the serial baseline then waits for the
+    last bucket (= full backward) before encoding. None = inputs ready at
+    t=0 (the shipped post-accumulation schedule).
+    """
+    t_compute = [float(t) for t in t_compute]
+    t_comm = [float(t) for t in t_comm]
+    ready = [0.0] * len(t_compute) if ready is None else [
+        float(r) for r in ready]
+    serial = (ready[-1] if ready else 0.0) + sum(t_compute) + sum(t_comm)
+    done_enc = done_comm = 0.0
+    for tc, tm, rd in zip(t_compute, t_comm, ready):
+        done_enc = max(done_enc, rd) + tc
+        done_comm = max(done_comm, done_enc) + tm
+    return serial, done_comm
+
+
+def _scale_bucket(base, d_bucket: int, d_total: int, i: int):
+    """Per-bucket compressor: k and sketch width scaled by the bucket's
+    share of coordinates (width re-rounded to a power of two, floored so
+    tiny buckets keep a usable sketch); per-bucket hash seed decorrelates
+    collisions across buckets."""
+    frac = d_bucket / d_total
+    out = base
+    if hasattr(base, "k"):
+        out = dataclasses.replace(
+            out, k=max(1, min(d_bucket, round(base.k * frac))))
+    if isinstance(base, _SketchBased):
+        width = max(256, math.ceil(base.sketch.width * frac))
+        sk = dataclasses.replace(base.sketch, width=width,
+                                 seed=base.sketch.seed + i)
+        out = dataclasses.replace(out, sketch=sk)
+    return out
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class BucketedCompressor:
+    """Base-compressor contract over a bucket partition.
+
+    ``init`` returns one EF state per bucket; ``step`` runs the buckets
+    back-to-back (the reference order — the overlapped schedule lives in
+    ``core/gs_sgd.py`` and is numerically identical because buckets cover
+    disjoint coordinates).
+    """
+
+    base: Any
+    spec: BucketSpec
+    parts: tuple[Any, ...]
+    name: str = "bucketed"
+
+    def init(self, d: int):
+        assert d == self.spec.total, (d, self.spec.total)
+        return tuple(c.init(s) for c, s in zip(self.parts, self.spec.sizes))
+
+    def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
+             key: Array | None = None, **kw):
+        if kw:  # e.g. include=: drop kwargs the base doesn't support, so a
+            # dense/topk bucketed step ignores the straggler mask exactly
+            # like the monolithic dense path does (mask-aware aggregation
+            # is a sketch-compressor capability)
+            import inspect
+            accepted = inspect.signature(
+                type(self.base).step).parameters
+            kw = {k: v for k, v in kw.items() if k in accepted}
+        upds, news, stats = [], [], []
+        for i, (c, st, gb) in enumerate(
+                zip(self.parts, state, self.spec.split(g))):
+            # single bucket passes the key through untouched so the
+            # documented buckets=1 == monolithic identity holds exactly
+            kb = (key if key is None or self.spec.n == 1
+                  else jax.random.fold_in(key, i))
+            u, s, nfo = c.step(st, gb, axis=axis, nworkers=nworkers,
+                               key=kb, **kw)
+            upds.append(u)
+            news.append(s)
+            stats.append(nfo)
+        return (self.spec.join(upds), tuple(news),
+                BucketedCommStats(tuple(stats), label=self.name))
+
+
+def bucketize(base, sizes) -> BucketedCompressor:
+    """Wrap ``base`` over contiguous buckets of the given sizes.
+
+    A single bucket reuses ``base`` unchanged — geometry (and therefore
+    numerics) identical to the monolithic compressor.
+    """
+    spec = BucketSpec(tuple(int(s) for s in sizes))
+    if spec.n == 1:
+        parts: tuple[Any, ...] = (base,)
+    else:
+        parts = tuple(_scale_bucket(base, db, spec.total, i)
+                      for i, db in enumerate(spec.sizes))
+    return BucketedCompressor(base=base, spec=spec, parts=parts,
+                              name=f"bucketed[{spec.n}]({base.name})")
 
 
 REGISTRY = {

@@ -38,8 +38,8 @@ import jax.numpy as jnp
 
 from repro.core import compression as comp
 from repro.models.common import ArchConfig, ShardCtx
-from repro.models.flatten import (SEG_NAMES, FlatSpec, make_flat_spec,
-                                  pack_segs, unpack_segs)
+from repro.models.flatten import (SEG_NAMES, FlatSpec, bucket_sizes,
+                                  make_flat_spec, pack_segs, unpack_segs)
 from repro.models import model as mdl
 from repro.optim.optimizers import Optimizer
 
@@ -114,6 +114,62 @@ def local_seg_shapes(fs: FlatSpec, ma: MeshAxes,
 
 
 # ---------------------------------------------------------------------------
+# Bucket scheduler (comm/compute overlap; see DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+def exchange_bucketed(bc: "comp.BucketedCompressor", ef_state, g_flat,
+                      *, axis, nworkers: int, overlap: bool = True,
+                      key=None, include=None):
+    """Run a bucketed gradient exchange, optionally software-pipelined.
+
+    overlap=False (or a non-staged base compressor): buckets are exchanged
+    strictly back-to-back via ``BucketedCompressor.step`` — the reference
+    order the equivalence tests pin down.
+
+    overlap=True emits the skewed schedule
+
+        encode(0); for i: reduce(i); encode(i+1); recover(i)
+
+    so bucket i's sketch all-reduce has NO data dependence on bucket i+1's
+    encode: on TPU, XLA's latency-hiding scheduler runs the collective
+    concurrently with the next bucket's compute (and, because each bucket's
+    chain depends only on its own slice of the accumulated gradient, the
+    first bucket's exchange is not serialized behind the full flat pack).
+    On CPU the same program executes sequentially. Buckets cover disjoint
+    coordinate ranges, so both orders are numerically identical.
+    """
+    n = bc.spec.n
+    staged = all(hasattr(c, "stage_encode") for c in bc.parts)
+    if not overlap or n == 1 or not staged:
+        kw = {} if include is None else {"include": include}
+        return bc.step(ef_state, g_flat, axis=axis, nworkers=nworkers,
+                       key=key, **kw)
+
+    parts = bc.spec.split(g_flat)
+    keys = [None if key is None else jax.random.fold_in(key, i)
+            for i in range(n)]
+    us: list = [None] * n
+    sks: list = [None] * n
+    outs: list = [None] * n
+    us[0], sks[0] = bc.parts[0].stage_encode(ef_state[0], parts[0])
+    for i in range(n):
+        sk_sum, scale = bc.parts[i].stage_reduce(
+            sks[i], axis=axis, nworkers=nworkers, include=include)
+        if i + 1 < n:  # next bucket's encode — independent of the reduce
+            us[i + 1], sks[i + 1] = bc.parts[i + 1].stage_encode(
+                ef_state[i + 1], parts[i + 1])
+        outs[i] = bc.parts[i].stage_recover(
+            us[i], sk_sum, scale, axis=axis, nworkers=nworkers,
+            key=keys[i], include=include)
+    upd = bc.spec.join([o[0] for o in outs])
+    ef_new = tuple(o[1] for o in outs)
+    stats = comp.BucketedCommStats(tuple(o[2] for o in outs),
+                                   label=bc.name + "|overlap")
+    return upd, ef_new, stats
+
+
+# ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------
 
@@ -128,6 +184,8 @@ class TrainStep:
     dp_mode: str
     compressor: Any | None
     d_local: int                  # flat coords per device (compressor input)
+    n_buckets: int = 1            # gradient-exchange buckets (1 = monolithic)
+    overlap: bool = True          # pipelined bucket schedule (n_buckets > 1)
 
     def init_state(self, key: Array, opt: Optimizer) -> Any:
         """Concrete state for single-device (tp=1, dp=1) smoke/test runs."""
@@ -155,7 +213,9 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                     remat: bool = True, dtype=jnp.bfloat16,
                     microbatch: int | None = None,
                     clip_norm: float | None = None,
-                    fs: FlatSpec | None = None) -> TrainStep:
+                    fs: FlatSpec | None = None,
+                    buckets: int | None = None,
+                    overlap: bool = True) -> TrainStep:
     """Build the per-device train step (to be wrapped in shard_map/vmap).
 
     compressor_name=None or 'dense' -> dense psum baseline. In fsdp mode
@@ -166,6 +226,16 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     whole local batch in one shot). Compression/optimizer run ONCE per
     step on the accumulated gradient — faithful to Alg. 1's per-iteration
     semantics regardless of accumulation.
+
+    buckets: None -> monolithic exchange (the seed path). An int routes the
+    exchange through the bucketed pipeline: the flat gradient is split at
+    FlatSpec segment boundaries into ~``buckets`` contiguous buckets, each
+    with its own EF state and proportionally scaled compressor geometry
+    ('dense'/None baselines bucket their psum too, so comparisons share
+    the schedule). buckets=1
+    exercises the bucketed code path with numerics identical to monolithic.
+    overlap: pipeline bucket i's all-reduce with bucket i+1's encode
+    (numerically identical either way; see ``exchange_bucketed``).
     """
     import math as _math
 
@@ -187,8 +257,17 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
         comp_n = ma.pod
 
     compressor = None
-    if compressor_name not in (None, "dense") and comp_axes:
-        compressor = comp.make(compressor_name, **(compressor_kw or {}))
+    bucketed = bool(buckets is not None and comp_axes)
+    if comp_axes and (compressor_name not in (None, "dense") or bucketed):
+        if compressor_name in (None, "dense"):
+            # buckets= with the dense/None baseline: run the psum through
+            # the bucketed schedule too, so baseline comparisons share it
+            compressor = comp.make("dense")
+        else:
+            compressor = comp.make(compressor_name, **(compressor_kw or {}))
+        if bucketed:
+            compressor = comp.bucketize(compressor,
+                                        bucket_sizes(shapes, buckets))
 
     def train_step(state: dict, batch: dict,
                    include: Array | None = None) -> tuple[dict, dict]:
@@ -235,8 +314,13 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
             kw = {"include": include} if include is not None else {}
             ef32 = jax.tree_util.tree_map(
                 lambda a: a.astype(jnp.float32), ef)
-            upd, ef_new, _ = compressor.step(
-                ef32, g_flat, axis=comp_axes, nworkers=comp_n, **kw)
+            if isinstance(compressor, comp.BucketedCompressor):
+                upd, ef_new, _ = exchange_bucketed(
+                    compressor, ef32, g_flat, axis=comp_axes,
+                    nworkers=comp_n, overlap=overlap, **kw)
+            else:
+                upd, ef_new, _ = compressor.step(
+                    ef32, g_flat, axis=comp_axes, nworkers=comp_n, **kw)
             ef_new = jax.tree_util.tree_map(
                 lambda new, old: new.astype(old.dtype), ef_new, ef)
         elif comp_axes:                    # dense baseline over dp axes
@@ -272,7 +356,11 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
         return new_state, {"loss": loss_rep, "grad_norm": gnorm}
 
     return TrainStep(fn=train_step, fs=fs, ma=ma, dp_mode=dp_mode,
-                     compressor=compressor, d_local=d_local)
+                     compressor=compressor, d_local=d_local,
+                     n_buckets=(compressor.spec.n
+                                if isinstance(compressor,
+                                              comp.BucketedCompressor) else 1),
+                     overlap=overlap)
 
 
 # ---------------------------------------------------------------------------

@@ -45,3 +45,50 @@ def decode(cfg: SketchConfig, sketch: Array, d: int, *,
         interp = (not _on_tpu()) if interpret is None else interpret
         return _pallas_decode(cfg, sketch, d, interpret=interp)
     return ref.count_sketch_decode(cfg, sketch, d)
+
+
+def encode_buckets(cfgs, g: Array, sizes, *, use_pallas: bool | None = None,
+                   interpret: bool | None = None) -> tuple[Array, ...]:
+    """Per-bucket encode with the same Pallas/ref dispatch as ``encode``.
+
+    One (rows_i, width_i) sketch per contiguous bucket of ``g`` (sizes sum
+    to g.size); bucket geometries may differ, so the result is a tuple.
+    The Pallas path delegates to ``sketch_encode_bucketed`` (one kernel
+    launch per bucket).
+
+    Direct kernel-layer entry for benches/tests and TPU callers holding a
+    whole flat vector; the train pipeline reaches the same kernels with
+    the same per-bucket geometry via each bucket-compressor's ``encode``
+    on its own slice (``compression.GsSGD.stage_encode``).
+    """
+    from repro.kernels.sketch_encode import sketch_encode_bucketed
+    g = g.reshape(-1)
+    sizes = tuple(int(s) for s in sizes)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return sketch_encode_bucketed(cfgs, g, sizes, interpret=interp)
+    out, off = [], 0
+    for cfg, s in zip(cfgs, sizes):
+        out.append(ref.count_sketch_encode(
+            cfg, jax.lax.slice_in_dim(g, off, off + s)))
+        off += s
+    return tuple(out)
+
+
+def decode_buckets(cfgs, sketches, sizes, *, use_pallas: bool | None = None,
+                   interpret: bool | None = None) -> Array:
+    """Per-bucket decode concatenated back into one flat estimate vector.
+
+    Pallas path delegates to ``sketch_decode_bucketed``."""
+    from repro.kernels.sketch_decode import sketch_decode_bucketed
+    sizes = tuple(int(s) for s in sizes)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        return sketch_decode_bucketed(cfgs, sketches, sizes,
+                                      interpret=interp)
+    return jnp.concatenate([ref.count_sketch_decode(cfg, sk, s)
+                            for cfg, sk, s in zip(cfgs, sketches, sizes)])

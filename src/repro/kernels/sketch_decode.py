@@ -103,3 +103,19 @@ def sketch_decode(cfg: SketchConfig, sketch: Array, d: int, *,
         interpret=interpret,
     )(hash_params, sketch.astype(jnp.float32))
     return out[:d]
+
+
+def sketch_decode_bucketed(cfgs, sketches, sizes, *, block_d: int = 1024,
+                           block_w: int = 512,
+                           interpret: bool = True) -> Array:
+    """Per-bucket decode back to one flat estimate vector.
+
+    Inverse companion of ``sketch_encode_bucketed``: bucket i's coordinates
+    are estimated from bucket i's sketch with bucket i's geometry, then
+    concatenated in bucket order — coordinate layout matches the flat
+    vector the encoder split.
+    """
+    parts = [sketch_decode(cfg, sk, int(s), block_d=block_d,
+                           block_w=block_w, interpret=interpret)
+             for cfg, sk, s in zip(cfgs, sketches, sizes)]
+    return jnp.concatenate(parts)

@@ -105,3 +105,26 @@ def sketch_encode(cfg: SketchConfig, g: Array, *, block_d: int = 1024,
         out_shape=jax.ShapeDtypeStruct((cfg.rows, cfg.width), jnp.float32),
         interpret=interpret,
     )(hash_params, g)
+
+
+def sketch_encode_bucketed(cfgs, g: Array, sizes, *, block_d: int = 1024,
+                           block_w: int = 512,
+                           interpret: bool = True) -> tuple[Array, ...]:
+    """Per-bucket encode of a flat vector (bucketed pipeline, DESIGN.md §5).
+
+    ``cfgs``/``sizes``: one SketchConfig + length per contiguous bucket
+    (sizes sum to g.size). One kernel launch per bucket — each launch keeps
+    its own MXU-aligned grid for its own (rows, width) geometry, and the
+    launches have no data dependence on each other, so the TPU scheduler
+    may overlap bucket i's DMA-out with bucket i+1's encode. Widths differ
+    per bucket, hence a tuple of (rows_i, width_i) sketches, not a stack.
+    """
+    g = g.reshape(-1)
+    assert sum(sizes) == g.shape[0], (sizes, g.shape)
+    out, off = [], 0
+    for cfg, s in zip(cfgs, sizes):
+        out.append(sketch_encode(cfg, jax.lax.slice_in_dim(g, off, off + s),
+                                 block_d=block_d, block_w=block_w,
+                                 interpret=interpret))
+        off += s
+    return tuple(out)

@@ -53,7 +53,12 @@ def build(args):
         cfg, ma, opt, dp_mode="dp",
         compressor_name=None if args.compressor == "none" else args.compressor,
         compressor_kw=ckw or None, remat=not args.no_remat,
-        dtype=jnp.float32, microbatch=args.microbatch)
+        dtype=jnp.float32, microbatch=args.microbatch,
+        buckets=args.buckets, overlap=not args.no_overlap)
+    if ts.n_buckets > 1:
+        sizes = ts.compressor.spec.sizes
+        print(f"bucketed exchange: {ts.n_buckets} buckets "
+              f"(sizes {list(sizes)}), overlap={'off' if args.no_overlap else 'on'}")
     return cfg, opt, ma, ts
 
 
@@ -75,6 +80,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--rows", type=int, default=5)
     ap.add_argument("--width", type=int, default=4096)
     ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--buckets", type=int, default=None,
+                    help="bucketed gradient exchange: ~N buckets split at "
+                         "FlatSpec segment boundaries (None = monolithic)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable the pipelined bucket schedule "
+                         "(sequential per-bucket exchange)")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)

@@ -191,6 +191,64 @@ def init_flat_params(cfg: ArchConfig, key: Array, tp: int = 1,
 # ---------------------------------------------------------------------------
 
 
+def bucket_atoms(shapes: dict[str, tuple[int, ...]]) -> list[int]:
+    """Indivisible chunk lengths of the packed flat vector, in pack order.
+
+    Natural boundaries of ``pack_segs``'s output: the two top-level segments
+    plus one chunk per cycle row of each per-cycle segment (row-major
+    reshape keeps every cycle's coordinates contiguous). Buckets built from
+    these atoms therefore never split a cycle-layer across buckets.
+    """
+    atoms: list[int] = []
+    for k in SEG_NAMES:
+        s = shapes[k]
+        if len(s) == 1:
+            if s[0]:
+                atoms.append(int(s[0]))
+        else:
+            rows, width = int(s[0]), int(s[1])
+            if width:
+                atoms.extend([width] * rows)
+    return atoms
+
+
+def bucket_sizes(shapes: dict[str, tuple[int, ...]],
+                 n_buckets: int) -> tuple[int, ...]:
+    """Group the flat vector's atoms into <= n_buckets contiguous buckets.
+
+    Greedy fill toward total/n_buckets per bucket: bucket boundaries
+    prefer segment/cycle boundaries (see ``bucket_atoms``), but an atom
+    larger than the per-bucket target (e.g. the embed+head top_s segment)
+    is subdivided evenly first — buckets are plain contiguous coordinate
+    ranges, so mid-segment cuts are safe. Sizes sum to the packed total,
+    and the result is a pure function of the static shapes — identical on
+    every worker, as gs-SGD's global selection needs.
+    """
+    atoms = bucket_atoms(shapes)
+    total = sum(atoms)
+    n_buckets = max(1, min(int(n_buckets), total))
+    target = total / n_buckets
+    split: list[int] = []
+    for a in atoms:  # pre-split oversized atoms for balance
+        parts = max(1, round(a / target))
+        base, rem = divmod(a, parts)
+        split.extend(base + (1 if i < rem else 0) for i in range(parts))
+    atoms = [a for a in split if a]
+    sizes: list[int] = []
+    cur = 0
+    for j, a in enumerate(atoms):
+        cur += a
+        atoms_after = len(atoms) - j - 1
+        buckets_after = n_buckets - len(sizes) - 1
+        if buckets_after > 0 and (cur >= target or atoms_after == buckets_after):
+            sizes.append(cur)
+            cur = 0
+    if cur:
+        sizes.append(cur)
+    assert sum(sizes) == total and len(sizes) <= n_buckets
+    return tuple(sizes)
+
+
 def pack_segs(segs: dict[str, Array]) -> Array:
     """Segment dict -> one flat f32 vector (compressor's view)."""
     return jnp.concatenate([segs[k].reshape(-1).astype(jnp.float32)

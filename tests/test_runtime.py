@@ -115,6 +115,92 @@ def test_elastic_training_survives_worker_loss():
         assert float(jnp.max(jnp.abs(v - v[0:1]))) == 0.0
 
 
+def test_heartbeat_driven_replan_mid_run():
+    """Failure injection end-to-end: a worker silently stops beating mid-run;
+    the monitor detects it between steps, the plan re-ranks, and training
+    continues on the survivors' replicated state."""
+    cfg = SMOKES["qwen3-4b"]
+    clock = [0.0]
+    hb = HeartbeatMonitor(range(4), clock=lambda: clock[0])
+    plan = initial_plan(4)
+    _, st, fn = _make_sim(cfg, 4)
+    losses = []
+    dead_worker = 2
+    for i, b in enumerate(_batches(cfg, 4, 2, 16, 3)):
+        st, m = fn(st, b)
+        losses.append(float(m["loss"][0]))
+        clock[0] += 10.0
+        for w in plan.survivor_ids:
+            if not (w == dead_worker and i >= 1):  # dies after step 1
+                hb.beat(w)
+    failed = hb.dead(timeout=15.0)
+    assert failed == {dead_worker}
+    for w in failed:
+        hb.remove(w)
+    plan = replan(plan, failed)
+    assert plan.n_workers == 3 and plan.generation == 1
+    assert plan.rank_of(dead_worker) is None
+    surv = jnp.array(plan.survivor_ids)
+    st3 = jax.tree_util.tree_map(lambda a: a[surv], st)
+    _, _, fn3 = _make_sim(cfg, 3)
+    for b in _batches(cfg, 3, 2, 16, 3, seed=300):
+        st3, m = fn3(st3, b)
+        losses.append(float(m["loss"][0]))
+    assert all(np.isfinite(losses))
+    for v in st3["params"].values():
+        assert float(jnp.max(jnp.abs(v - v[0:1]))) == 0.0
+
+
+def test_successive_failures_and_rejoin():
+    """P=8 -> lose 2 -> lose 2 more -> one rejoins; every generation's tree
+    schedule stays valid and the LR scale tracks the worker count."""
+    plan = initial_plan(8)
+    plan = replan(plan, failed={1, 6})
+    plan = replan(plan, failed={0, 7})
+    assert plan.n_workers == 4 and plan.generation == 2
+    assert plan.lr_scale == pytest.approx((6 / 8) * (4 / 6))
+    plan = replan(plan, failed=set(), joined=(8,), rescale_lr=False)
+    assert plan.survivor_ids[-1] == 8 and plan.n_workers == 5
+    for rounds in (plan.schedule,):
+        flat = [r for pairs in rounds for pair in pairs for r in pair]
+        assert all(0 <= r < plan.n_workers for r in flat)
+
+
+def test_deadline_policy_feeds_bucketed_straggler_drop():
+    """Dropout mid-step through the BUCKETED exchange: the policy's include
+    mask threads through every bucket — each bucket's merged sketch is
+    exact for the live subset, the applied update is the rescaled live sum,
+    and the dropped worker keeps its FULL update in every bucket's EF."""
+    from repro.core import compression as comp
+    from repro.core.gs_sgd import exchange_bucketed
+
+    pol = DeadlinePolicy(factor=3.0, max_drop_frac=0.25)
+    for _ in range(4):
+        pol.observe([1.0, 1.0, 1.1, 0.9])
+    include = jnp.asarray(pol.mask([1.0, 1.05, 0.95, 30.0]),
+                          jnp.float32)  # worker 3 blows the deadline
+    assert include.tolist() == [1.0, 1.0, 1.0, 0.0]
+
+    P_, d, n_buckets = 4, 8192, 4
+    g = jax.random.normal(jax.random.PRNGKey(8), (P_, d))
+    bc = comp.bucketize(comp.make("gs-sgd", k=512, rows=5, width=2048),
+                        comp.even_bucket_sizes(d, n_buckets))
+    state = jax.vmap(lambda _: bc.init(d))(jnp.arange(P_))
+
+    def step(s, gg, inc):
+        return exchange_bucketed(bc, s, gg, axis="data", nworkers=P_,
+                                 overlap=True, include=inc)
+
+    upd, new_state, _ = jax.vmap(step, axis_name="data")(state, g, include)
+    sel = np.nonzero(np.asarray(upd[0]))[0]
+    live_sum = np.asarray(jnp.sum(g[:3], 0))
+    np.testing.assert_allclose(np.asarray(upd[0])[sel],
+                               live_sum[sel] * (4 / 3), rtol=1e-4, atol=1e-4)
+    # the dropped worker keeps its entire update, bucket by bucket
+    dropped_acc = np.concatenate([np.asarray(s[3]) for s in new_state])
+    np.testing.assert_allclose(dropped_acc, np.asarray(g[3]), rtol=1e-6)
+
+
 def test_straggler_drop_step_keeps_convergence():
     """A step with one dropped straggler stays unbiased and in-sync."""
     cfg = SMOKES["qwen3-4b"]
