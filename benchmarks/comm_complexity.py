@@ -5,7 +5,12 @@
     gTop-k:        O(k * log P)       (tree of 2k (value, index) payloads)
 
 Evaluated from the static CommStats at d = 15M (VGG-16 scale) over
-P = 2..64, both bytes and Eq.-1 modeled time at 1 GbE.
+P = 2..64, both bytes and Eq.-1 modeled time at 1 GbE. Emits
+machine-readable JSON (``experiments/bench/comm_complexity.json``): flat
+``curves`` rows keyed by (method, p) plus the geometry block, so sweep
+tooling and the tier-1 cross-check against ``repro.sim`` (which replays
+the same schedules as discrete events — tests/test_sim.py) consume it
+without parsing printouts.
 """
 
 from __future__ import annotations
@@ -19,15 +24,20 @@ import jax.numpy as jnp
 
 from repro.core import compression as comp
 
+from repro.sim.network import LINK_1GBE      # canonical Eq. 1 link model
+
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
-ALPHA, BETA = 5e-4, 8e-9
+ALPHA, BETA = LINK_1GBE.alpha, LINK_1GBE.beta
 K, ROWS, WIDTH = 15_000, 5, 2 ** 17  # ~0.1% of d, paper-scale sketch
+METHODS = ("gs-sgd", "sketched-sgd", "gtopk")
 
 
-def stats_for(method: str, p: int):
-    kw = dict(k=K)
+def stats_for(method: str, p: int, *, k: int = K, rows: int = ROWS,
+              width: int = WIDTH, d: int | None = None) -> comp.CommStats:
+    """Measured CommStats of one real compressor step at worker count p."""
+    kw: dict = dict(k=k)
     if method in ("gs-sgd", "sketched-sgd"):
-        kw.update(rows=ROWS, width=WIDTH)
+        kw.update(rows=rows, width=width)
     if method == "gs-sgd":
         kw.update(allreduce_mode="tree")
     c = comp.make(method, **kw)
@@ -38,40 +48,56 @@ def stats_for(method: str, p: int):
         box["stats"] = stats
         return u, st
 
-    d = WIDTH  # payload shapes only depend on sketch/k geometry
+    d = d or width  # payload shapes only depend on sketch/k geometry
     jax.vmap(probe, axis_name="data")(
         jnp.stack([c.init(d)] * p), jnp.zeros((p, d)))
     return box["stats"]
 
 
+def analytic_curves(ps, methods=METHODS, *, k: int = K, rows: int = ROWS,
+                    width: int = WIDTH, d: int | None = None) -> list[dict]:
+    """Flat rows: one dict per (method, p) with bytes/rounds/Eq.1 time."""
+    rows_out = []
+    for p in ps:
+        for m in methods:
+            s = stats_for(m, p, k=k, rows=rows, width=width, d=d)
+            rows_out.append({"method": m, "p": p, "bytes": s.bytes_out,
+                             "rounds": s.rounds,
+                             "time_1gbe": s.time(ALPHA, BETA)})
+    return rows_out
+
+
 def main() -> dict:
     ps = [2, 4, 8, 16, 32, 64]
-    results = {}
-    print(f"{'P':>4s}  " + "".join(f"{m:>22s}" for m in
-                                   ("gs-sgd", "sketched-sgd", "gtopk")))
+    curves = analytic_curves(ps)
+    by = {(c["method"], c["p"]): c for c in curves}
+    print(f"{'P':>4s}  " + "".join(f"{m:>22s}" for m in METHODS))
     for p in ps:
-        row = {}
-        for m in ("gs-sgd", "sketched-sgd", "gtopk"):
-            s = stats_for(m, p)
-            row[m] = {"bytes": s.bytes_out, "rounds": s.rounds,
-                      "time_1gbe": s.time(ALPHA, BETA)}
-        results[p] = row
         print(f"{p:4d}  " + "".join(
-            f"{row[m]['bytes'] / 2**20:9.1f}MiB/{row[m]['rounds']:3d}r   "
-            for m in ("gs-sgd", "sketched-sgd", "gtopk")))
+            f"{by[m, p]['bytes'] / 2**20:9.1f}MiB/{by[m, p]['rounds']:3d}r   "
+            for m in METHODS))
 
     # asymptotic claims: fit growth from P=8 -> 64
     def growth(m):
-        return results[64][m]["bytes"] / results[8][m]["bytes"]
+        return by[m, 64]["bytes"] / by[m, 8]["bytes"]
 
     g_gs, g_ps = growth("gs-sgd"), growth("sketched-sgd")
     print(f"bytes growth P=8->64: gs-sgd {g_gs:.2f}x (log: "
           f"{math.log2(64) / math.log2(8):.2f}x), "
           f"sketched-sgd {g_ps:.2f}x (linear: {64 / 8:.1f}x)")
     assert g_gs < 2.5 < g_ps
+    results = {
+        "model": {"alpha": ALPHA, "beta": BETA, "k": K, "rows": ROWS,
+                  "width": WIDTH, "link": "1gbe"},
+        "methods": list(METHODS),
+        "ps": ps,
+        "curves": curves,
+        "checks": {"gs_bytes_growth_8_64": g_gs,
+                   "sketched_bytes_growth_8_64": g_ps},
+    }
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "comm_complexity.json"), "w") as f:
-        json.dump(results, f)
+        json.dump(results, f, indent=1)
     return results
 
 

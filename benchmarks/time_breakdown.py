@@ -35,10 +35,13 @@ from repro.models import cnn
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
 
-ALPHA_1GBE = 5e-4          # per-round startup, seconds
-BETA_1GBE = 8e-9           # seconds per byte at 1 Gbit/s
-HBM_BW = 819e9             # accelerator memory bandwidth (bytes/s)
-ACCEL_FLOPS = 50e12        # f32-ish sustained flops for the CNN parts
+from repro.sim.network import LINK_1GBE      # canonical Eq. 1 link model
+from repro.sim.replay import ENCODE_BW       # canonical HBM stream rate
+
+ALPHA_1GBE = LINK_1GBE.alpha  # per-round startup, seconds
+BETA_1GBE = LINK_1GBE.beta    # seconds per byte at 1 Gbit/s
+HBM_BW = ENCODE_BW            # accelerator memory bandwidth (bytes/s)
+ACCEL_FLOPS = 50e12           # f32-ish sustained flops for the CNN parts
 
 METHODS = ["gs-sgd", "sketched-sgd", "gtopk"]
 

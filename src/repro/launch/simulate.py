@@ -1,0 +1,151 @@
+"""Cluster-simulation driver: topology-aware gs-SGD timelines at large P.
+
+Runs ``repro.sim`` — the discrete-event simulator that replays the real
+``reduce_schedule`` / bucketed-overlap pipeline on a modeled network — so
+elastic/straggler policies and the paper's communication claims can be
+evaluated at P=1024+ on a laptop in seconds.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.simulate --p 1024 --method gs-sgd \
+      --buckets 8 --fault-trace examples/traces/fail_rejoin.json
+  PYTHONPATH=src python -m repro.launch.simulate --p 256 --topology hier \
+      --group-size 32 --method gtopk --steps 50
+  PYTHONPATH=src python -m repro.launch.simulate --p 512 --synthetic-faults \
+      "fail_rate=0.05,rejoin_after=20" --out experiments/sim_512.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.sim import (ComputeModel, FaultTrace, SimConfig, simulate,
+                       synthetic)
+
+
+def _parse_kv(spec: str) -> dict:
+    out: dict = {}
+    for part in filter(None, spec.split(",")):
+        k, v = part.split("=")
+        out[k.strip()] = float(v) if "." in v or "e" in v.lower() else int(v)
+    return out
+
+
+def _timeline(res, around: int = 2) -> None:
+    """Per-phase table: aggregate + every step near a replan/drop event."""
+    hot = set()
+    for rp in res.replans:
+        hot.update(range(rp["step"] - 1, rp["step"] + around))
+    hot.update(r.step for r in res.records if r.dropped)
+    print(f"{'step':>5s} {'P':>5s} {'gen':>3s} "
+          f"{'compute':>9s} {'stall':>9s} {'encode':>9s} {'comm':>9s} "
+          f"{'recover':>9s} {'total':>9s}  events")
+    shown_gap = False
+    for r in res.records:
+        interesting = (r.step in hot or r.step < 2
+                       or r.step == len(res.records) - 1)
+        if not interesting:
+            if not shown_gap:
+                print("  ...")
+                shown_gap = True
+            continue
+        shown_gap = False
+        evs = []
+        for rp in res.replans:
+            if rp["step"] == r.step:
+                what = (f"fail{rp['failed']}" if rp["failed"]
+                        else f"join{rp['joined']}")
+                evs.append(f"replan gen{rp['generation']} -> P={rp['p']} "
+                           f"({what}, lr x{rp['lr_scale']:.3f})")
+        if r.dropped:
+            evs.append(f"dropped stragglers {list(r.dropped)}")
+        print(f"{r.step:5d} {r.p:5d} {r.generation:3d} "
+              f"{r.compute:9.4f} {r.stall:9.4f} {r.encode:9.4f} "
+              f"{r.comm:9.4f} {r.recover:9.4f} {r.total:9.4f}  "
+              + "; ".join(evs))
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="discrete-event gs-SGD cluster simulator")
+    ap.add_argument("--p", type=int, default=64, help="initial worker count")
+    ap.add_argument("--d", type=int, default=15_000_000,
+                    help="flat gradient dimension (default: VGG-16 scale)")
+    ap.add_argument("--method", default="gs-sgd",
+                    choices=["gs-sgd", "gtopk", "sketched-sgd", "dense"])
+    ap.add_argument("--buckets", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--k", type=int, default=None)
+    ap.add_argument("--rows", default="5",
+                    help="sketch rows: int, or 'log' for O(log d) depth")
+    ap.add_argument("--width", type=int, default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[None, "tree", "ring", "hier", "ps"],
+                    help="collective shape override (default per method)")
+    ap.add_argument("--topology", default="flat", choices=["flat", "hier"])
+    ap.add_argument("--link", default="1gbe",
+                    choices=["1gbe", "10gbe", "ici"])
+    ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--no-overlap", action="store_true")
+    ap.add_argument("--compute-mean", type=float, default=0.1,
+                    help="mean seconds of fwd+bwd per step")
+    ap.add_argument("--compute-jitter", type=float, default=0.08)
+    ap.add_argument("--heartbeat-timeout", type=float, default=1.0)
+    ap.add_argument("--no-drop-stragglers", action="store_true")
+    ap.add_argument("--deadline-factor", type=float, default=3.0)
+    ap.add_argument("--fault-trace", default=None,
+                    help="path to a JSON fault trace (see sim/traces.py)")
+    ap.add_argument("--synthetic-faults", default=None, metavar="KV",
+                    help="generate a seeded trace, e.g. "
+                         "'fail_rate=0.05,straggle_rate=0.1,rejoin_after=20'")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write full JSON result here")
+    args = ap.parse_args(argv)
+
+    trace = FaultTrace()
+    if args.fault_trace:
+        trace = FaultTrace.load(args.fault_trace)
+    elif args.synthetic_faults is not None:
+        kv = _parse_kv(args.synthetic_faults)
+        rejoin = kv.pop("rejoin_after", None)
+        trace = synthetic(args.p, args.steps, seed=args.seed,
+                          rejoin_after=int(rejoin) if rejoin else None,
+                          **{k: float(v) for k, v in kv.items()})
+
+    rows: int | str = args.rows if args.rows == "log" else int(args.rows)
+    cfg = SimConfig(
+        p=args.p, d=args.d, method=args.method, buckets=args.buckets,
+        steps=args.steps, k=args.k, rows=rows, width=args.width,
+        shape=args.shape, topology=args.topology, link=args.link,
+        group_size=args.group_size, overlap=not args.no_overlap,
+        compute=ComputeModel(mean=args.compute_mean,
+                             jitter=args.compute_jitter, seed=args.seed),
+        heartbeat_timeout=args.heartbeat_timeout,
+        drop_stragglers=not args.no_drop_stragglers,
+        deadline_factor=args.deadline_factor, seed=args.seed)
+
+    t0 = time.time()
+    res = simulate(cfg, trace)
+    wall = time.time() - t0
+    tot = res.totals()
+    print(f"simulated P={args.p} d={args.d:.2e} {args.method} "
+          f"buckets={args.buckets} for {tot['steps']} steps "
+          f"({res.events_run} events) in {wall:.2f}s wall, "
+          f"{tot['makespan']:.1f}s simulated\n")
+    _timeline(res)
+    print(f"\nphase totals (s): " + "  ".join(
+        f"{k}={tot[k]:.2f}" for k in
+        ("compute", "stall", "encode", "comm", "recover")))
+    print(f"bytes/worker (critical path): {tot['bytes_critical']:.3e}  "
+          f"fabric bytes: {tot['bytes_wire']:.3e}  rounds: {tot['rounds']}")
+    print(f"throughput: {tot['steps_per_s']:.2f} steps/s simulated; "
+          f"{len(res.replans)} elastic replan(s)")
+    if args.out:
+        res.dump(args.out)
+        print(f"wrote {args.out}")
+    return tot
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""repro.sim — deterministic discrete-event simulator of a gs-SGD cluster.
+
+Sweeps P into the thousands on a laptop while sharing schedule/geometry
+sources of truth with the JAX execution path (DESIGN.md §6):
+
+    engine.py   — seeded, insertion-ordered event loop
+    network.py  — alpha-beta link models, topologies, collective replay on
+                  the real ``allreduce.reduce_schedule``
+    workers.py  — per-worker compute-time distributions
+    traces.py   — scripted fail / join / straggle scenarios (JSON)
+    replay.py   — exchange pricing from the real compressors + the real
+                  ``overlap_schedule_time`` bucket-pipeline recurrence
+    cluster.py  — the timeline: real HeartbeatMonitor / ElasticPlan /
+                  DeadlinePolicy driven by simulated time
+"""
+
+from repro.sim.cluster import SimConfig, SimResult, StepRecord, simulate
+from repro.sim.engine import EventLoop
+from repro.sim.network import (LINK_1GBE, LINK_10GBE, LINK_ICI, Heterogeneous,
+                               Hierarchical, Homogeneous, LinkSpec,
+                               NetworkModel, RoundCost, allreduce_cost,
+                               hierarchical_allreduce_cost, make_network,
+                               pairwise_rounds, ps_gather_cost,
+                               ring_allreduce_cost, tree_allreduce_cost)
+from repro.sim.replay import ExchangeReplay, PhaseCost, default_geometry
+from repro.sim.traces import FaultTrace, TraceEvent, synthetic
+from repro.sim.workers import ComputeModel
+
+__all__ = [
+    "SimConfig", "SimResult", "StepRecord", "simulate", "EventLoop",
+    "LinkSpec", "NetworkModel", "Homogeneous", "Hierarchical",
+    "Heterogeneous", "RoundCost", "LINK_1GBE", "LINK_10GBE", "LINK_ICI",
+    "make_network", "pairwise_rounds", "tree_allreduce_cost",
+    "ring_allreduce_cost", "ps_gather_cost", "hierarchical_allreduce_cost",
+    "allreduce_cost", "ExchangeReplay", "PhaseCost", "default_geometry",
+    "FaultTrace", "TraceEvent", "synthetic", "ComputeModel",
+]

@@ -1,0 +1,276 @@
+"""Cluster simulation: gs-SGD steps on a modeled network with real policies.
+
+``simulate`` runs a synchronous training timeline for ``steps`` iterations
+at any P on the discrete-event loop. Per step:
+
+  1. fault-trace events apply (``fail`` silences a worker's heartbeat and
+     its compute; ``straggle`` stretches its compute; ``join`` hands a
+     worker to ``elastic.replan(joined=...)``),
+  2. per-worker compute durations are drawn from the ``ComputeModel``,
+  3. the REAL ``runtime.straggler.DeadlinePolicy`` — fed with the
+     *simulated* step durations — produces the drop mask; dropped workers
+     join the collective immediately with a zeroed sketch (the
+     ``include=`` semantics of ``GsSGD.stage_reduce``), so the barrier
+     waits only for included workers,
+  4. the exchange is priced by ``replay.ExchangeReplay`` on the live
+     membership (real schedules, real bucket pipeline),
+  5. every live worker beats the REAL ``runtime.heartbeat.HeartbeatMonitor``
+     (clock = the simulated event-loop clock) at step end.
+
+Failure detection is not scripted: a silenced worker blocks the barrier,
+and the coordinator only learns of the death when ``monitor.dead(timeout)``
+fires on the simulated clock — the replan time is ``last_beat + timeout``,
+exactly the runtime layer's contract. The step then re-executes on the
+survivors under the regenerated ``elastic.ElasticPlan`` (whose
+``schedule`` property is the real ``allreduce.reduce_schedule``), with the
+detection wait recorded as stall.
+
+Everything is deterministic given (config, trace): the event loop breaks
+ties by insertion order and all sampling is counter-based per (seed, step,
+worker).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.runtime.elastic import ElasticPlan, initial_plan, replan
+from repro.runtime.heartbeat import HeartbeatMonitor
+from repro.runtime.straggler import DeadlinePolicy
+from repro.sim.engine import EventLoop
+from repro.sim.network import NetworkModel, make_network
+from repro.sim.replay import ExchangeReplay
+from repro.sim.traces import FaultTrace
+from repro.sim.workers import ComputeModel
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class SimConfig:
+    p: int
+    d: int = 1_000_000
+    method: str = "gs-sgd"
+    buckets: int = 1
+    steps: int = 100
+    k: int | None = None
+    rows: int | str = 5
+    width: int | None = None
+    shape: str | None = None          # collective shape (None = per-method)
+    topology: str = "flat"            # 'flat' | 'hier' network
+    link: str = "1gbe"
+    intra_link: str = "ici"
+    group_size: int = 8
+    overlap: bool = True
+    compute: ComputeModel = dataclasses.field(default_factory=ComputeModel)
+    heartbeat_timeout: float = 1.0    # seconds of silence before dead
+    drop_stragglers: bool = True
+    deadline_factor: float = 3.0
+    max_drop_frac: float = 0.25
+    rescale_lr: bool = True
+    slow_workers: dict[int, float] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    t_start: float
+    p: int
+    generation: int
+    compute: float
+    stall: float
+    encode: float
+    comm: float
+    recover: float
+    bytes_wire: float
+    bytes_critical: float
+    rounds: int
+    dropped: tuple[int, ...] = ()
+
+    @property
+    def total(self) -> float:
+        return self.compute + self.stall + self.encode + self.comm + self.recover
+
+
+@dataclasses.dataclass
+class SimResult:
+    config: SimConfig
+    records: list[StepRecord]
+    replans: list[dict]
+    makespan: float
+    events_run: int
+
+    def phase_totals(self) -> dict[str, float]:
+        keys = ("compute", "stall", "encode", "comm", "recover")
+        return {k: sum(getattr(r, k) for r in self.records) for k in keys}
+
+    def totals(self) -> dict:
+        ph = self.phase_totals()
+        return {
+            **ph,
+            "makespan": self.makespan,
+            "steps": len(self.records),
+            "bytes_wire": sum(r.bytes_wire for r in self.records),
+            "bytes_critical": sum(r.bytes_critical for r in self.records),
+            "rounds": sum(r.rounds for r in self.records),
+            "replans": len(self.replans),
+            "steps_per_s": (len(self.records) / self.makespan
+                            if self.makespan > 0 else float("inf")),
+        }
+
+    def to_json(self) -> dict:
+        return {
+            # asdict flattens the nested ComputeModel too — everything in
+            # the config is JSON-serializable provenance
+            "config": dataclasses.asdict(self.config),
+            "totals": self.totals(),
+            "replans": self.replans,
+            "steps": [dataclasses.asdict(r) for r in self.records],
+        }
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+
+def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
+             net: NetworkModel | None = None) -> SimResult:
+    trace = trace or FaultTrace()
+    net = net or make_network(cfg.topology, link=cfg.link,
+                              group_size=cfg.group_size,
+                              intra=cfg.intra_link,
+                              slow_workers=cfg.slow_workers)
+    rep = ExchangeReplay(cfg.method, cfg.d, buckets=cfg.buckets, k=cfg.k,
+                         rows=cfg.rows, width=cfg.width, shape=cfg.shape,
+                         group_size=cfg.group_size)
+    compute = (cfg.compute if cfg.compute.seed is not None
+               else dataclasses.replace(cfg.compute, seed=cfg.seed))
+    loop = EventLoop()
+    hb = HeartbeatMonitor(range(cfg.p), clock=lambda: loop.now)
+    policy = DeadlinePolicy(factor=cfg.deadline_factor,
+                            max_drop_frac=cfg.max_drop_frac)
+
+    st: dict = {"plan": initial_plan(cfg.p), "step": 0, "silenced": set(),
+                "straggle": {}, "pending_stall": 0.0, "applied": -1}
+    cost_cache: dict[tuple[int, ...], object] = {}
+    records: list[StepRecord] = []
+    replans: list[dict] = []
+
+    def do_replan(failed: set[int], joined: tuple[int, ...], step: int) -> None:
+        plan: ElasticPlan = st["plan"]
+        new = replan(plan, failed=failed, joined=joined,
+                     rescale_lr=cfg.rescale_lr)
+        for w in failed:
+            hb.remove(w)
+        for w in joined:
+            hb.add(w)
+        st["plan"] = new
+        replans.append({"time": loop.now, "step": step,
+                        "generation": new.generation, "p": new.n_workers,
+                        "failed": sorted(failed), "joined": list(joined),
+                        "lr_scale": new.lr_scale})
+
+    def run_step(loop: EventLoop) -> None:
+        s = st["step"]
+        if s >= cfg.steps:
+            return
+        plan: ElasticPlan = st["plan"]
+        if st["applied"] < s:  # trace events apply once per step index
+            st["applied"] = s
+            evs = trace.at(s)
+            # joins first, so a same-step fail of the joiner isn't lost
+            joined = []
+            for ev in evs:
+                if ev.kind == "join" and ev.worker not in plan.survivor_ids:
+                    st["silenced"].discard(ev.worker)
+                    joined.append(ev.worker)
+            if joined:
+                do_replan(set(), tuple(joined), s)
+                plan = st["plan"]
+            for ev in evs:
+                if ev.kind == "fail" and ev.worker in plan.survivor_ids:
+                    st["silenced"].add(ev.worker)
+                elif ev.kind == "straggle":
+                    st["straggle"][ev.worker] = (ev.factor, s + ev.duration)
+
+        members = plan.survivor_ids
+        silent = [w for w in members if w in st["silenced"]]
+        if silent:
+            # The barrier hangs on the dead worker(s); the coordinator
+            # learns of the death only when the heartbeat goes quiet for
+            # ``timeout`` on the simulated clock.
+            t_start = loop.now
+
+            def detect(loop: EventLoop) -> None:
+                # responsive workers kept beating while blocked at the
+                # barrier (beats ride the coordination channel, not step
+                # completion) — only the silenced ones have gone quiet
+                for w in members:
+                    if w not in st["silenced"]:
+                        hb.beat(w)
+                failed = hb.dead(cfg.heartbeat_timeout) & set(members)
+                assert failed, "detection event fired with no dead worker"
+                st["silenced"] -= failed
+                if len(failed) >= plan.n_workers:
+                    # whole cluster dead: end the run gracefully with the
+                    # records computed so far instead of raising mid-event
+                    replans.append({"time": loop.now, "step": s,
+                                    "generation": plan.generation + 1,
+                                    "p": 0, "failed": sorted(failed),
+                                    "joined": [], "lr_scale": 0.0,
+                                    "cluster_failed": True})
+                    return
+                do_replan(failed, (), s)
+                st["pending_stall"] += loop.now - t_start
+                run_step(loop)
+
+            # last beat was at (or before) this step's start
+            loop.at(loop.now + cfg.heartbeat_timeout + _EPS, detect)
+            return
+
+        factors = {w: f for w, (f, until) in st["straggle"].items()
+                   if s < until}
+        durs = compute.durations(s, members, factors)
+        if cfg.drop_stragglers and len(members) > 1:
+            include = policy.mask(durs)
+        else:
+            include = np.ones(len(durs), bool)
+        policy.observe(durs)
+        dropped = tuple(w for w, inc in zip(members, include) if not inc)
+        barrier = float(np.max(durs[include]))
+        t_compute = float(np.mean(durs[include]))
+        # dropped stragglers join the collective at the deadline with a
+        # zeroed sketch (include-mask semantics) — comm runs over all live.
+        # step_cost is pure in the membership, which only changes at
+        # replans — cache it so steady-state steps are O(1)
+        pc = cost_cache.get(members)
+        if pc is None:
+            pc = cost_cache[members] = rep.step_cost(
+                net, members, overlap=cfg.overlap)
+        records.append(StepRecord(
+            step=s, t_start=loop.now, p=plan.n_workers,
+            generation=plan.generation, compute=t_compute,
+            stall=st["pending_stall"] + (barrier - t_compute),
+            encode=pc.encode, comm=pc.comm, recover=pc.recover,
+            bytes_wire=pc.bytes_wire, bytes_critical=pc.bytes_critical,
+            rounds=pc.rounds, dropped=dropped))
+        st["pending_stall"] = 0.0
+        step_wall = barrier + pc.encode + pc.comm + pc.recover
+
+        def finish(loop: EventLoop) -> None:
+            for w in st["plan"].survivor_ids:
+                if w not in st["silenced"]:
+                    hb.beat(w)
+            st["step"] += 1
+            run_step(loop)
+
+        loop.after(step_wall, finish)
+
+    loop.after(0.0, run_step)
+    makespan = loop.run()
+    return SimResult(config=cfg, records=records, replans=replans,
+                     makespan=makespan, events_run=loop.events_run)

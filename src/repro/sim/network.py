@@ -1,0 +1,278 @@
+"""Pluggable network models + collective cost replay on REAL schedules.
+
+A ``NetworkModel`` prices a point-to-point transfer with the paper's Eq. 1
+alpha-beta model per link: ``t = alpha + nbytes * beta``. Three shapes:
+
+* ``Homogeneous``     — one (alpha, beta) for every pair (the paper's 1 GbE
+                        testbed; presets below).
+* ``Hierarchical``    — two-level clusters: fast intra-group links (ICI /
+                        NVLink-ish), slow inter-group links (DCN / 1 GbE).
+* ``Heterogeneous``   — per-worker degradation factors on top of any base
+                        model (a "slow NIC" worker stretches every link it
+                        touches — the straggler regime DeadlinePolicy
+                        targets).
+
+Collective replay is the core invariant of the simulator (DESIGN.md §6):
+the tree costs are computed by walking the *same* ``(src, dst)`` pair
+lists that ``core/allreduce.tree_allreduce`` executes as ppermutes —
+``reduce_schedule(p)`` forward for the reduce wave, reversed/transposed
+for the broadcast wave — so the simulated round structure (including the
+non-power-of-two parking rule) cannot drift from the JAX path. Ring and
+parameter-server shapes replay the byte/round models the analytical
+``CommStats`` in ``core/compression.py`` use, so simulator and closed-form
+benchmarks agree exactly where they overlap.
+
+Every collective returns a list of ``RoundCost``:
+
+    duration       — critical-path time of the round (slowest pair)
+    bytes_wire     — total bytes injected into the fabric by all senders
+    bytes_critical — the per-worker Eq. 1 payload term (what CommStats
+                     calls ``bytes_out``; the quantity the O(log d log P)
+                     claim is about)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import allreduce as ar
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """Eq. 1 alpha-beta link: startup latency (s) + inverse bandwidth (s/B)."""
+
+    alpha: float
+    beta: float
+
+    def time(self, nbytes: float) -> float:
+        return self.alpha + nbytes * self.beta
+
+
+# The paper's testbed regimes (shared constants with time_breakdown.py).
+LINK_1GBE = LinkSpec(alpha=5e-4, beta=8e-9)
+LINK_10GBE = LinkSpec(alpha=2e-4, beta=8e-10)
+LINK_ICI = LinkSpec(alpha=1e-6, beta=1e-11)
+
+PRESETS = {"1gbe": LINK_1GBE, "10gbe": LINK_10GBE, "ici": LINK_ICI}
+
+
+class NetworkModel:
+    """Base: price a transfer between two worker ids."""
+
+    def link(self, src: int, dst: int) -> LinkSpec:
+        raise NotImplementedError
+
+    def transfer(self, src: int, dst: int, nbytes: float) -> float:
+        return self.link(src, dst).time(nbytes)
+
+    def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
+        """Slowest link among the given workers for an ``nbytes`` payload
+        (alpha-bound when 0). O(n^2) generic fallback; subclasses override
+        with O(1)/O(n) answers — this sits inside the per-step replay loop
+        at P=4096."""
+        worst = LinkSpec(0.0, 0.0)
+        for s in ids:
+            for d in ids:
+                if s == d:
+                    continue
+                ln = self.link(s, d)
+                if ln.time(nbytes) > worst.time(nbytes):
+                    worst = ln
+        return worst
+
+
+@dataclasses.dataclass(frozen=True)
+class Homogeneous(NetworkModel):
+    spec: LinkSpec = LINK_1GBE
+
+    def link(self, src: int, dst: int) -> LinkSpec:
+        return self.spec
+
+    def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
+        return self.spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchical(NetworkModel):
+    """Two-level: workers in groups of ``group_size``; crossing is slow."""
+
+    group_size: int = 8
+    intra: LinkSpec = LINK_ICI
+    inter: LinkSpec = LINK_1GBE
+
+    def link(self, src: int, dst: int) -> LinkSpec:
+        if src // self.group_size == dst // self.group_size:
+            return self.intra
+        return self.inter
+
+    def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
+        groups = {w // self.group_size for w in ids}
+        return self.inter if len(groups) > 1 else self.intra
+
+
+@dataclasses.dataclass(frozen=True)
+class Heterogeneous(NetworkModel):
+    """Per-worker multiplicative slowdowns over a base model.
+
+    ``factors[w]`` > 1 stretches alpha and beta of every link touching w
+    (both directions take the worst endpoint's factor).
+    """
+
+    base: NetworkModel
+    factors: dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def link(self, src: int, dst: int) -> LinkSpec:
+        f = max(self.factors.get(src, 1.0), self.factors.get(dst, 1.0))
+        ln = self.base.link(src, dst)
+        return LinkSpec(ln.alpha * f, ln.beta * f) if f != 1.0 else ln
+
+    def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
+        # upper bound: worst base link stretched by the worst factor present
+        f = max((self.factors.get(w, 1.0) for w in ids), default=1.0)
+        ln = self.base.worst_link(ids, nbytes)
+        return LinkSpec(ln.alpha * f, ln.beta * f)
+
+
+def make_network(topology: str, *, link: str | LinkSpec = "1gbe",
+                 group_size: int = 8, intra: str | LinkSpec = "ici",
+                 slow_workers: dict[int, float] | None = None) -> NetworkModel:
+    """Factory for the CLI: topology in {'flat', 'hier'} + slow-worker map."""
+    spec = PRESETS[link] if isinstance(link, str) else link
+    ispec = PRESETS[intra] if isinstance(intra, str) else intra
+    net: NetworkModel
+    if topology == "hier":
+        net = Hierarchical(group_size=group_size, intra=ispec, inter=spec)
+    elif topology == "flat":
+        net = Homogeneous(spec)
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    if slow_workers:
+        net = Heterogeneous(net, dict(slow_workers))
+    return net
+
+
+# ---------------------------------------------------------------------------
+# Collective cost replay
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCost:
+    duration: float
+    bytes_wire: float
+    bytes_critical: float
+
+
+def total(rounds: Sequence[RoundCost]) -> tuple[float, float, float]:
+    """(duration, bytes_wire, bytes_critical) summed over the rounds."""
+    return (sum(r.duration for r in rounds),
+            sum(r.bytes_wire for r in rounds),
+            sum(r.bytes_critical for r in rounds))
+
+
+def pairwise_rounds(net: NetworkModel, ids: Sequence[int],
+                    rounds_pairs: Sequence[Sequence[tuple[int, int]]],
+                    nbytes: float) -> list[RoundCost]:
+    """Replay rank-level (src, dst) rounds over the worker-id map ``ids``.
+
+    Pairs within a round run concurrently (the ppermute semantics); the
+    round's duration is its slowest pair on this network.
+    """
+    out = []
+    for pairs in rounds_pairs:
+        if not pairs:
+            continue
+        dur = max(net.transfer(ids[s], ids[d], nbytes) for s, d in pairs)
+        out.append(RoundCost(dur, nbytes * len(pairs), nbytes))
+    return out
+
+
+def tree_allreduce_cost(net: NetworkModel, ids: Sequence[int],
+                        nbytes: float) -> list[RoundCost]:
+    """Paper Alg. 1 all-reduce: the REAL ``reduce_schedule`` + its mirror.
+
+    Round count is ``len(sched) * 2`` = ``ar.tree_allreduce_rounds(p)`` =
+    2⌈log2 p⌉ for any p (parking included) — asserted in tests/test_sim.py.
+    """
+    p = len(ids)
+    if p <= 1:
+        return []
+    sched = ar.reduce_schedule(p)
+    back = [[(d, s) for (s, d) in pairs] for pairs in reversed(sched)]
+    return pairwise_rounds(net, ids, list(sched) + back, nbytes)
+
+
+def ring_allreduce_cost(net: NetworkModel, ids: Sequence[int],
+                        nbytes: float) -> list[RoundCost]:
+    """Bandwidth-optimal ring: 2(P-1) rounds of an nbytes/P chunk to the
+    next rank — per-worker critical bytes 2(P-1)/P · nbytes, matching
+    ``compression._ring_allreduce_bytes`` exactly."""
+    p = len(ids)
+    if p <= 1:
+        return []
+    chunk = nbytes / p
+    dur = max(net.transfer(ids[i], ids[(i + 1) % p], chunk)
+              for i in range(p))  # every round walks the same ring
+    return [RoundCost(dur, chunk * p, chunk)] * (2 * (p - 1))
+
+
+def ps_gather_cost(net: NetworkModel, ids: Sequence[int], nbytes: float,
+                   server_rank: int = 0) -> list[RoundCost]:
+    """Parameter-server inbox: every worker's payload lands on ONE node.
+
+    The server NIC serializes the P-1 inbound transfers — one round each,
+    which is exactly the O(P) rounds/bytes hotspot ``SketchedSGD``'s
+    CommStats charges (rounds = P) and the paper's Sec. III-B contrasts
+    with the tree."""
+    srv = ids[server_rank]
+    return [RoundCost(net.transfer(w, srv, nbytes), nbytes, nbytes)
+            for w in ids if w != srv]
+
+
+def hierarchical_allreduce_cost(net: NetworkModel, ids: Sequence[int],
+                                nbytes: float,
+                                group_size: int) -> list[RoundCost]:
+    """Two-level composite: per-group Alg. 1 reduce (groups concurrent),
+    Alg. 1 all-reduce over group leaders, per-group broadcast back."""
+    p = len(ids)
+    if p <= 1:
+        return []
+    groups = [list(ids[i:i + group_size]) for i in range(0, p, group_size)]
+    leaders = [g[0] for g in groups]
+
+    def merge_concurrent(per_group: list[list[RoundCost]]) -> list[RoundCost]:
+        depth = max((len(r) for r in per_group), default=0)
+        out = []
+        for i in range(depth):
+            rs = [r[i] for r in per_group if i < len(r)]
+            out.append(RoundCost(max(r.duration for r in rs),
+                                 sum(r.bytes_wire for r in rs),
+                                 max(r.bytes_critical for r in rs)))
+        return out
+
+    reduce_waves, bcast_waves = [], []
+    for g in groups:
+        sched = ar.reduce_schedule(len(g))
+        reduce_waves.append(pairwise_rounds(net, g, sched, nbytes))
+        back = [[(d, s) for (s, d) in pairs] for pairs in reversed(sched)]
+        bcast_waves.append(pairwise_rounds(net, g, back, nbytes))
+    return (merge_concurrent(reduce_waves)
+            + tree_allreduce_cost(net, leaders, nbytes)
+            + merge_concurrent(bcast_waves))
+
+
+def allreduce_cost(net: NetworkModel, ids: Sequence[int], nbytes: float, *,
+                   shape: str = "tree", group_size: int = 8,
+                   server_rank: int = 0) -> list[RoundCost]:
+    """Dispatch: shape in {'tree', 'ring', 'hier', 'ps'}."""
+    if shape == "tree":
+        return tree_allreduce_cost(net, ids, nbytes)
+    if shape == "ring":
+        return ring_allreduce_cost(net, ids, nbytes)
+    if shape == "hier":
+        return hierarchical_allreduce_cost(net, ids, nbytes, group_size)
+    if shape == "ps":
+        return ps_gather_cost(net, ids, nbytes, server_rank)
+    raise ValueError(f"unknown collective shape {shape!r}")

@@ -1,0 +1,219 @@
+"""Per-step exchange cost replay — priced from the REAL compressor objects.
+
+The simulator must not re-derive payload geometry or schedule structure:
+``ExchangeReplay`` builds the very ``core.compression`` compressor the JAX
+path would run (including ``bucketize``'s per-bucket k/width scaling for
+the bucketed gs-SGD pipeline), walks the very ``allreduce.reduce_schedule``
+rounds, and combines per-bucket encode/comm stage times with the very
+``compression.overlap_schedule_time`` recurrence that models
+``gs_sgd.exchange_bucketed``'s skewed schedule
+
+    encode(0); for i: reduce(i); encode(i+1); recover(i)
+
+so a change to any of those lands in simulated timelines automatically
+(the shared-schedule invariant, DESIGN.md §6).
+
+Byte accounting matches the analytical ``CommStats`` convention where the
+two overlap, which the tier-1 cross-check test pins down:
+
+* tree gs-SGD: every one of the 2⌈log2 P⌉ replayed rounds carries the
+  sketch payload → critical bytes ``rounds * sketch_bytes``; the exact
+  second round adds ``k * 4`` bytes over 2 rounds (k floats up, summed
+  values back — received bytes are not ``bytes_out``).
+* gTop-k: per replayed round 2k numbers — k values + k coordinates.
+* dense: ring, 2(P-1) chunks of d/P floats → 2(P-1)/P · 4d bytes.
+* Sketched-SGD: PS star — P-1 serialized inbound sketches + 1 broadcast.
+
+Compute-side stage times are priced at memory-streaming cost (the
+accelerator regime of ``benchmarks/time_breakdown.py``): encode streams
+d·rows coordinates read+write; recovery streams the sketch estimate plus a
+multi-pass top-k; gTop-k pays one re-sparsification per reduce round ON
+the latency chain (the paper's key structural contrast).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import compression as comp
+from repro.sim import network as netm
+
+_F32 = 4
+_I32 = 4
+ENCODE_BW = 819e9   # bytes/s memory streaming (time_breakdown.HBM_BW)
+TOPK_PASSES = 10    # multi-pass radix-select passes for a top-k over d
+
+
+def default_geometry(d: int, *, k: int | None = None,
+                     rows: int | str = "log",
+                     width: int | None = None) -> tuple[int, int, int]:
+    """(k, rows, width) for a given d — paper-regime defaults.
+
+    k: 0.4% of d (Sec. IV-A final density). rows: 'log' scales the sketch
+    depth O(log d) (the failure-probability union bound that gives the
+    paper its O(log d) payload term); an int pins it. width: ~k/2 rounded
+    to a power of two.
+    """
+    k = k or max(64, int(0.004 * d))
+    if rows == "log":
+        rows = max(3, math.ceil(math.log2(max(d, 2))))
+    width = width or (1 << max(8, (k // 2 - 1).bit_length()))
+    return int(k), int(rows), int(width)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseCost:
+    """One simulated step's exchange, split the way the timeline reports it.
+
+    encode / comm / recover are the *exposed* (wall-clock) phase times
+    after the bucket pipeline's overlap; ``comm_serial`` is the
+    un-overlapped sum (so ``encode + comm_serial - (encode + comm)`` is
+    the modeled overlap saving). Bytes/rounds are per step, critical =
+    the per-worker Eq. 1 payload term the complexity claims are about.
+    """
+
+    encode: float
+    comm: float
+    recover: float
+    comm_serial: float
+    bytes_wire: float
+    bytes_critical: float
+    rounds: int
+
+    @property
+    def total(self) -> float:
+        return self.encode + self.comm + self.recover
+
+    @property
+    def overlap_saving(self) -> float:
+        return max(0.0, self.encode + self.comm_serial - (self.encode + self.comm))
+
+
+def _stream_time(nbytes: float) -> float:
+    return nbytes / ENCODE_BW
+
+
+class ExchangeReplay:
+    """Prices one step's gradient exchange for a live worker-id list.
+
+    Built once per simulation (geometry depends only on d/method/buckets);
+    ``step_cost`` is re-evaluated per step because membership — and with it
+    the real ``reduce_schedule`` — changes under elastic replans.
+    """
+
+    def __init__(self, method: str, d: int, *, buckets: int = 1,
+                 k: int | None = None, rows: int | str = "log",
+                 width: int | None = None, shape: str | None = None,
+                 group_size: int = 8, wire_dtype_bytes: int = 4):
+        self.method = method
+        self.d = int(d)
+        self.group_size = group_size
+        k, rows_i, width = default_geometry(d, k=k, rows=rows, width=width)
+        self.k, self.rows, self.width = k, rows_i, width
+        self.shape = shape or {"dense": "ring", "sketched-sgd": "ps",
+                               "gs-sgd": "tree", "gtopk": "tree"}[method]
+        # gTop-k's per-hop merge and Sketched-SGD's PS inbox ARE their
+        # algorithms — an override would silently mislabel the experiment
+        if method == "gtopk" and self.shape != "tree":
+            raise ValueError("gTop-k's merge is defined on the tree; "
+                             f"shape={self.shape!r} is not replayable")
+        if method == "sketched-sgd" and self.shape != "ps":
+            raise ValueError("Sketched-SGD aggregates at a parameter "
+                             f"server; shape={self.shape!r} is not "
+                             "replayable")
+        self.wire = wire_dtype_bytes
+        if method in ("gs-sgd", "sketched-sgd"):
+            base = comp.make(method, k=k, rows=rows_i, width=width)
+        elif method == "gtopk":
+            base = comp.make("gtopk", k=k)
+        elif method == "dense":
+            base = comp.make("dense")
+        else:
+            raise ValueError(f"unknown method {method!r}")
+        self.bc = comp.bucketize(base, comp.even_bucket_sizes(d, buckets))
+
+    # -- per-bucket stage models ------------------------------------------
+
+    def _encode_time(self, d_b: int, c) -> float:
+        if self.method in ("gs-sgd", "sketched-sgd"):
+            return _stream_time(d_b * c.sketch.rows * 8)
+        if self.method == "gtopk":
+            return _stream_time(TOPK_PASSES * d_b * _F32)
+        return 0.0
+
+    def _recover_time(self, d_b: int, c) -> float:
+        if self.method in ("gs-sgd", "sketched-sgd"):
+            # HEAVYMIX: decode-estimate stream + one top-k over candidates
+            return _stream_time(d_b * c.sketch.rows * 8
+                                + TOPK_PASSES * d_b * _F32)
+        return 0.0
+
+    def _comm_rounds(self, net: netm.NetworkModel, ids: Sequence[int],
+                     c, d_b: int) -> list[netm.RoundCost]:
+        p = len(ids)
+        if p <= 1:
+            return []
+        if self.method == "dense":
+            # full payload per round on non-ring shapes (tree/hier trade
+            # bandwidth for alpha-rounds — the contrast the sweep shows)
+            return netm.allreduce_cost(net, ids, d_b * _F32,
+                                       shape=self.shape,
+                                       group_size=self.group_size)
+        if self.method == "gtopk":
+            per_round = c.k * (_F32 + _I32)
+            rounds = netm.tree_allreduce_cost(net, ids, per_round)
+            # per-reduce-round re-sparsification sits ON the latency chain
+            resparse = _stream_time(TOPK_PASSES * d_b * _F32)
+            half = len(rounds) // 2
+            return [dataclasses.replace(r, duration=r.duration + resparse)
+                    if i < half else r for i, r in enumerate(rounds)]
+        sk_bytes = c.sketch.size * self.wire
+        if self.method == "sketched-sgd":
+            gather = netm.ps_gather_cost(net, ids, sk_bytes)
+            bcast = [netm.RoundCost(
+                max(net.transfer(ids[0], w, sk_bytes)
+                    for w in ids if w != ids[0]), sk_bytes * (p - 1),
+                sk_bytes)]
+            return gather + bcast + self._second_round(net, ids, c.k)
+        # gs-sgd: sketch all-reduce on the configured shape + second round
+        rounds = netm.allreduce_cost(net, ids, sk_bytes, shape=self.shape,
+                                     group_size=self.group_size)
+        return rounds + self._second_round(net, ids, c.k)
+
+    def _second_round(self, net: netm.NetworkModel, ids: Sequence[int],
+                      k: int) -> list[netm.RoundCost]:
+        """Exact-value second round (Alg. 2 line 4): k floats up, the
+        summed values broadcast back — 2 rounds, k·4 injected bytes (the
+        CommStats ``+ k*F32, rounds + 2`` convention)."""
+        nbytes = k * _F32
+        worst = net.worst_link(ids, nbytes).time(nbytes)
+        return [netm.RoundCost(worst, nbytes * len(ids), nbytes),
+                netm.RoundCost(worst, nbytes * len(ids), 0.0)]
+
+    # -- one step ----------------------------------------------------------
+
+    def step_cost(self, net: netm.NetworkModel, ids: Sequence[int],
+                  *, overlap: bool = True) -> PhaseCost:
+        ids = list(ids)
+        t_enc, t_comm, t_rec = [], [], []
+        b_wire = b_crit = 0.0
+        n_rounds = 0
+        for c, d_b in zip(self.bc.parts, self.bc.spec.sizes):
+            t_enc.append(self._encode_time(d_b, c))
+            rounds = self._comm_rounds(net, ids, c, d_b)
+            dur, wire, crit = netm.total(rounds)
+            t_comm.append(dur)
+            t_rec.append(self._recover_time(d_b, c))
+            b_wire += wire
+            b_crit += crit
+            n_rounds += len(rounds)
+        serial, pipelined = comp.overlap_schedule_time(t_enc, t_comm)
+        encode = sum(t_enc)
+        comm_serial = sum(t_comm)
+        comm = (pipelined - encode) if (overlap and self.bc.spec.n > 1) \
+            else comm_serial
+        return PhaseCost(encode=encode, comm=comm, recover=sum(t_rec),
+                         comm_serial=comm_serial, bytes_wire=b_wire,
+                         bytes_critical=b_crit, rounds=n_rounds)

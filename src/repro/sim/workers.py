@@ -1,0 +1,61 @@
+"""Per-worker compute-time models for the cluster simulator.
+
+One simulated training step's compute phase (forward + backward + local
+encode staging) is drawn per worker from a seeded distribution around a
+mean, scaled by a per-worker speed factor (static hardware skew) and any
+transient straggle factors injected by the fault trace. Sampling is
+counter-based — ``durations(step, ids)`` derives its Generator from
+``(seed, step)`` — so a worker's draw depends only on (seed, step, id),
+never on membership history: replays after an elastic replan stay
+deterministic and two sweeps with the same seed are comparable
+step-by-step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ComputeModel:
+    """Lognormal step-time model: heavy right tail, never negative —
+    the empirical shape of real step-time distributions.
+
+    mean    — target mean seconds per step (per worker, unskewed)
+    jitter  — coefficient of variation of the lognormal (0 = constant)
+    speed   — optional {worker_id: factor}; factor 2.0 = twice as slow
+    seed    — base seed for the counter-based per-step Generators
+              (None = inherit the enclosing SimConfig's seed)
+    """
+
+    mean: float = 0.1
+    jitter: float = 0.05
+    speed: dict[int, float] = dataclasses.field(default_factory=dict)
+    seed: int | None = None
+
+    def durations(self, step: int, ids: tuple[int, ...],
+                  straggle: dict[int, float] | None = None) -> np.ndarray:
+        """Seconds of compute for each live worker at this step.
+
+        One Generator per (seed, step, worker) — a worker's draw is
+        independent of who else is in the membership tuple, which is what
+        makes a faulted run comparable step-by-step with its fault-free
+        twin.
+        """
+        if self.jitter > 0:
+            # lognormal with mean `self.mean` and cv `self.jitter`
+            sigma2 = np.log1p(self.jitter ** 2)
+            mu = np.log(self.mean) - sigma2 / 2
+            sigma = np.sqrt(sigma2)
+            base = np.array([
+                np.random.default_rng(np.random.SeedSequence(
+                    [self.seed or 0, step, int(w)])).lognormal(mu, sigma)
+                for w in ids])
+        else:
+            base = np.full(len(ids), self.mean)
+        straggle = straggle or {}
+        scale = np.array([self.speed.get(w, 1.0) * straggle.get(w, 1.0)
+                          for w in ids])
+        return base * scale

@@ -32,6 +32,41 @@ def test_replan_join_and_all_fail():
         replan(p, failed={3, 9})
 
 
+def test_replan_pure_join_reranks_and_rescales_lr_up():
+    """Worker rejoin path: joined ids append after survivors in dense rank
+    order, the generation bumps, and the linear-scaling rule scales the LR
+    UP with the grown worker count."""
+    p = initial_plan(4)
+    p1 = replan(p, failed=set(), joined=(7, 9))
+    assert p1.n_workers == 6
+    assert p1.survivor_ids == (0, 1, 2, 3, 7, 9)
+    # dense re-ranking: joiners take the next ranks, old ranks unchanged
+    assert [p1.rank_of(w) for w in (0, 3, 7, 9)] == [0, 3, 4, 5]
+    assert p1.generation == 1
+    assert p1.lr_scale == pytest.approx(6 / 4)
+    # the regenerated tree schedule covers the grown rank space
+    flat = [r for pairs in p1.schedule for pair in pairs for r in pair]
+    assert flat and all(0 <= r < 6 for r in flat)
+    assert ar.tree_allreduce_rounds(6) == 2 * 3
+
+
+def test_replan_join_without_lr_rescale():
+    p1 = replan(initial_plan(4), failed=set(), joined=(5,), rescale_lr=False)
+    assert p1.lr_scale == 1.0 and p1.n_workers == 5 and p1.generation == 1
+
+
+def test_replan_fail_and_join_same_generation():
+    """A failure and a rejoin folded into ONE replan: net worker count is
+    unchanged, so the linear-scaling LR rule is a no-op, but ranks densify
+    around the hole and the joiner lands at the tail."""
+    p1 = replan(initial_plan(4), failed={1}, joined=(8,))
+    assert p1.survivor_ids == (0, 2, 3, 8)
+    assert p1.rank_of(2) == 1 and p1.rank_of(8) == 3
+    assert p1.rank_of(1) is None
+    assert p1.lr_scale == pytest.approx(1.0)
+    assert p1.generation == 1
+
+
 @pytest.mark.parametrize("p", [2, 3, 5, 6, 7, 9])
 def test_plan_schedule_valid_any_p(p):
     plan = ElasticPlan(p, tuple(range(p)), 0)
@@ -64,6 +99,41 @@ def test_deadline_policy_caps_drops():
     pol.observe([1.0] * 8)
     mask = pol.mask([9.0] * 6 + [1.0, 1.0])  # 6 outliers, cap = 2
     assert (~mask).sum() == 2
+
+
+def test_deadline_policy_zero_drop_frac_never_drops():
+    """max_drop_frac=0 is the hard-sync escape hatch: the deadline check
+    can flag outliers, but the cap forces every worker back in."""
+    pol = DeadlinePolicy(factor=1.5, max_drop_frac=0.0)
+    for _ in range(4):
+        pol.observe([1.0, 1.0, 1.0, 1.0])
+    mask = pol.mask([1.0, 1.0, 1.0, 500.0])
+    np.testing.assert_array_equal(mask, [True] * 4)
+
+
+def test_deadline_policy_all_equal_durations_keep_everyone():
+    pol = DeadlinePolicy(factor=3.0, max_drop_frac=0.5)
+    # with AND without history, d == median for all -> everyone included
+    np.testing.assert_array_equal(pol.mask([2.0] * 6), [True] * 6)
+    pol.observe([2.0] * 6)
+    np.testing.assert_array_equal(pol.mask([2.0] * 6), [True] * 6)
+
+
+def test_deadline_policy_window_evicts_old_observations():
+    """The running median is computed over the last ``window`` steps only:
+    once an era of fast steps ages out, a uniformly slow regime is the new
+    normal and nobody is dropped for matching it."""
+    pol = DeadlinePolicy(factor=1.5, max_drop_frac=0.5, window=4)
+    pol.observe([1.0] * 4)                 # fast era
+    slow = [10.0] * 4
+    mask = pol.mask(slow)                  # fast history still in window
+    assert (~mask).sum() == 2              # deadline trips, capped at 50%
+    for _ in range(4):
+        pol.observe(slow)                  # fills the window, evicts 1.0s
+    assert len(pol._hist) == 4
+    np.testing.assert_array_equal(pol.mask(slow), [True] * 4)
+    # the evicted fast era no longer shrinks the median
+    assert float(np.median(np.concatenate(pol._hist))) == 10.0
 
 
 def _make_sim(cfg, P, seed=0):

@@ -1,0 +1,336 @@
+"""The discrete-event cluster simulator: shared-schedule invariants,
+complexity claims on measured simulated traffic, cross-checks against the
+analytical CommStats curves, and fault/straggler scenario replay."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import allreduce as ar
+from repro.core import compression as comp
+from repro.sim import (ComputeModel, EventLoop, ExchangeReplay, FaultTrace,
+                       Heterogeneous, Hierarchical, Homogeneous, LinkSpec,
+                       SimConfig, TraceEvent, hierarchical_allreduce_cost,
+                       ring_allreduce_cost, simulate, synthetic,
+                       tree_allreduce_cost)
+
+NET = Homogeneous(LinkSpec(alpha=1e-4, beta=1e-8))
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_event_loop_orders_by_time_then_insertion():
+    loop = EventLoop()
+    out = []
+    loop.after(2.0, lambda lp: out.append("late"))
+    loop.after(1.0, lambda lp: out.append("a"))
+    loop.after(1.0, lambda lp: out.append("b"))      # same time: FIFO
+    loop.after(1.0, lambda lp: lp.after(0.5, lambda l2: out.append("nested")))
+    end = loop.run()
+    assert out == ["a", "b", "nested", "late"]
+    assert end == 2.0
+    with pytest.raises(ValueError):
+        loop.at(1.0, lambda lp: None)  # scheduling into the past
+
+
+# ---------------------------------------------------------------------------
+# shared-schedule invariant: the replayed tree IS Alg. 1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", list(range(2, 65)))
+def test_tree_round_count_matches_alg1_for_any_p(p):
+    """2⌈log2 P⌉ rounds for every P in 2..64 — parking rule included —
+    because the replay walks ``ar.reduce_schedule`` itself."""
+    rounds = tree_allreduce_cost(NET, list(range(p)), 1024.0)
+    assert len(rounds) == 2 * math.ceil(math.log2(p))
+    assert len(rounds) == ar.tree_allreduce_rounds(p)
+
+
+def test_ring_matches_compression_byte_model():
+    p, nbytes = 8, 4096.0
+    rounds = ring_allreduce_cost(NET, list(range(p)), nbytes)
+    assert len(rounds) == 2 * (p - 1)
+    crit = sum(r.bytes_critical for r in rounds)
+    assert crit == pytest.approx(2 * (p - 1) / p * nbytes)
+
+
+def test_hierarchical_composes_group_trees():
+    ids = list(range(16))
+    rounds = hierarchical_allreduce_cost(NET, ids, 1000.0, group_size=4)
+    # 4 groups of 4: intra reduce ceil(log2 4)=2, leaders 2*ceil(log2 4)=4,
+    # intra broadcast 2
+    assert len(rounds) == 2 + 4 + 2
+
+
+# ---------------------------------------------------------------------------
+# cross-check: analytical CommStats curve == simulated critical bytes
+# ---------------------------------------------------------------------------
+
+
+GEO = dict(k=256, rows=3, width=4096)
+D_SMALL = 8192
+
+
+@pytest.mark.parametrize("p", [3, 8])  # 3 exercises the parking rule
+def test_sim_cross_checks_analytic_comm_complexity(p):
+    from benchmarks.comm_complexity import analytic_curves
+
+    curves = {c["method"]: c for c in analytic_curves(
+        [p], ("gs-sgd", "sketched-sgd", "gtopk"), d=D_SMALL, **GEO)}
+    for method in ("gs-sgd", "gtopk", "sketched-sgd"):
+        rep = ExchangeReplay(method, D_SMALL, **GEO)
+        pc = rep.step_cost(NET, list(range(p)))
+        ana = curves[method]
+        assert pc.bytes_critical == pytest.approx(ana["bytes"]), method
+        if method == "sketched-sgd":
+            # the analytical CommStats folds the exact second round into
+            # its byte total but not its round count; the replay prices it
+            # as 2 explicit rounds
+            assert pc.rounds == ana["rounds"] + 2
+        else:
+            assert pc.rounds == ana["rounds"]
+
+
+def test_sim_cross_checks_dense_ring_stats():
+    p = 8
+    rep = ExchangeReplay("dense", D_SMALL)
+    pc = rep.step_cost(NET, list(range(p)))
+    # the ring byte/round model DenseAllReduce's CommStats charges
+    assert pc.bytes_critical == pytest.approx(2 * (p - 1) / p * D_SMALL * 4)
+    assert pc.rounds == 2 * (p - 1)
+
+
+# ---------------------------------------------------------------------------
+# the paper's complexity claims on measured simulated traffic
+# ---------------------------------------------------------------------------
+
+
+def _bytes_per_step(method, p, d):
+    cfg = SimConfig(p=p, d=d, method=method, steps=2, k=2048, rows="log",
+                    width=8192, compute=ComputeModel(mean=0.01, jitter=0.0),
+                    drop_stragglers=False)
+    res = simulate(cfg)
+    return res.totals()["bytes_critical"] / len(res.records)
+
+
+def test_gs_sgd_bytes_grow_log_d_log_p_dense_grows_d():
+    ps, ds = (4, 16, 64), (2 ** 18, 2 ** 22)
+    gs = {(p, d): _bytes_per_step("gs-sgd", p, d) for p in ps for d in ds}
+    dn = {(p, d): _bytes_per_step("dense", p, d) for p in ps for d in ds}
+    # P growth at fixed d: gs-sgd tracks log2 P, dense saturates (ring)
+    g_p = gs[64, ds[0]] / gs[4, ds[0]]
+    log_ratio = math.log2(64) / math.log2(4)
+    assert g_p <= 1.3 * log_ratio
+    assert g_p >= 0.7 * log_ratio        # it does grow ~log P, not O(1)
+    d_p = dn[64, ds[0]] / dn[4, ds[0]]
+    assert d_p <= (2 * 63 / 64) / (2 * 3 / 4) * 1.01
+    # d growth at fixed P: gs-sgd tracks log2 d (the rows term), dense is
+    # linear in d
+    lin = ds[1] / ds[0]
+    g_d = gs[ps[0], ds[1]] / gs[ps[0], ds[0]]
+    assert g_d <= 1.3 * (math.log2(ds[1]) / math.log2(ds[0]))
+    d_d = dn[ps[0], ds[1]] / dn[ps[0], ds[0]]
+    assert d_d == pytest.approx(lin, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# bucketed pipeline replay uses the real recurrence + real geometry
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_replay_shares_geometry_and_recurrence():
+    d, buckets = 2 ** 16, 4
+    rep1 = ExchangeReplay("gs-sgd", d, buckets=1, **GEO)
+    repN = ExchangeReplay("gs-sgd", d, buckets=buckets, **GEO)
+    assert repN.bc.spec.n == buckets
+    # geometry is the real bucketize scaling: per-bucket widths sum to ~W
+    assert sum(c.sketch.width for c in repN.bc.parts) == pytest.approx(
+        rep1.bc.parts[0].sketch.width, rel=0.5)
+    ids = list(range(8))
+    pc1, pcN = rep1.step_cost(NET, ids), repN.step_cost(NET, ids)
+    # aggregate payload preserved within scaling slack; rounds multiply
+    assert 0.5 <= pcN.bytes_critical / pc1.bytes_critical <= 2.0
+    assert pcN.rounds > pc1.rounds
+    # the exposed comm is exactly the overlap_schedule_time recurrence
+    from repro.sim import network as netm
+    t_enc = [repN._encode_time(db, c)
+             for c, db in zip(repN.bc.parts, repN.bc.spec.sizes)]
+    t_comm = [netm.total(repN._comm_rounds(NET, ids, c, db))[0]
+              for c, db in zip(repN.bc.parts, repN.bc.spec.sizes)]
+    serial, pipelined = comp.overlap_schedule_time(t_enc, t_comm)
+    assert pcN.comm == pytest.approx(pipelined - sum(t_enc))
+    assert pcN.comm <= pcN.comm_serial + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# network models
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_slow_worker_stretches_rounds():
+    ids = list(range(8))
+    slow = Heterogeneous(NET, {3: 10.0})
+    base = tree_allreduce_cost(NET, ids, 10_000.0)
+    deg = tree_allreduce_cost(slow, ids, 10_000.0)
+    assert sum(r.duration for r in deg) > sum(r.duration for r in base)
+    assert sum(r.bytes_critical for r in deg) == pytest.approx(
+        sum(r.bytes_critical for r in base))  # bytes unchanged, time isn't
+
+
+def test_hierarchical_worst_link_and_locality():
+    net = Hierarchical(group_size=4, intra=LinkSpec(1e-6, 1e-11),
+                       inter=LinkSpec(1e-3, 1e-8))
+    assert net.worst_link([0, 1, 2]) == net.intra
+    assert net.worst_link([0, 5]) == net.inter
+    # intra-group collective is orders faster than one crossing groups
+    fast = sum(r.duration for r in tree_allreduce_cost(net, [0, 1, 2, 3], 1e6))
+    slow = sum(r.duration for r in tree_allreduce_cost(net, [0, 4, 8, 12], 1e6))
+    assert slow > 50 * fast
+
+
+# ---------------------------------------------------------------------------
+# cluster scenarios: heartbeat-driven replans, stragglers, determinism
+# ---------------------------------------------------------------------------
+
+
+def _small_cfg(p=8, **kw):
+    base = dict(p=p, d=50_000, method="gs-sgd", buckets=2, steps=10,
+                k=256, rows=3, width=1024,
+                compute=ComputeModel(mean=0.05, jitter=0.05),
+                heartbeat_timeout=0.4)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_heartbeat_drives_mid_run_replan():
+    trace = FaultTrace((TraceEvent(4, "fail", 2),))
+    res = simulate(_small_cfg(), trace)
+    assert len(res.replans) == 1
+    rp = res.replans[0]
+    assert rp["step"] == 4 and rp["failed"] == [2] and rp["generation"] == 1
+    assert rp["p"] == 7 and rp["lr_scale"] == pytest.approx(7 / 8)
+    # detection waited out the heartbeat timeout on the simulated clock
+    rec = res.records[4]
+    assert rec.stall >= 0.4
+    assert rec.p == 7 and rec.generation == 1
+    # earlier steps ran at full membership; later ones at P-1
+    assert res.records[3].p == 8 and res.records[-1].p == 7
+    assert len(res.records) == 10
+
+
+def test_join_bumps_generation_and_membership():
+    trace = FaultTrace((TraceEvent(2, "fail", 0), TraceEvent(6, "join", 0)))
+    res = simulate(_small_cfg(rescale_lr=False), trace)
+    gens = [rp["generation"] for rp in res.replans]
+    assert gens == [1, 2]
+    assert res.replans[1]["joined"] == [0]
+    assert res.records[-1].p == 8
+    assert all(rp["lr_scale"] == 1.0 for rp in res.replans)
+
+
+def test_straggle_event_triggers_deadline_drop():
+    trace = FaultTrace((TraceEvent(5, "straggle", 3, factor=50.0),))
+    res = simulate(_small_cfg(), trace)
+    assert res.records[5].dropped == (3,)
+    assert all(r.dropped == () for r in res.records if r.step != 5)
+    # the barrier did NOT wait for the straggler: step 5's wall time is in
+    # family with its neighbors, nowhere near 50x compute
+    t5 = res.records[5].total
+    t4 = res.records[4].total
+    assert t5 < 3 * t4
+
+
+def test_no_drop_when_straggler_dropping_disabled():
+    trace = FaultTrace((TraceEvent(5, "straggle", 3, factor=50.0),))
+    res = simulate(_small_cfg(drop_stragglers=False), trace)
+    assert res.records[5].dropped == ()
+    assert res.records[5].stall > 10 * res.records[4].total  # barrier waits
+
+
+def test_sim_config_seed_varies_compute_draws():
+    r1 = simulate(_small_cfg(seed=1))
+    r2 = simulate(_small_cfg(seed=2))
+    assert r1.makespan != r2.makespan  # jitter draws differ per seed
+    # an explicit ComputeModel seed takes precedence over SimConfig.seed
+    cm = ComputeModel(mean=0.05, jitter=0.05, seed=7)
+    r3 = simulate(_small_cfg(seed=1, compute=cm))
+    r4 = simulate(_small_cfg(seed=2, compute=cm))
+    assert r3.makespan == r4.makespan
+
+
+def test_algorithm_bound_shapes_reject_overrides():
+    with pytest.raises(ValueError):
+        ExchangeReplay("gtopk", D_SMALL, shape="ring")
+    with pytest.raises(ValueError):
+        ExchangeReplay("sketched-sgd", D_SMALL, shape="tree")
+    # dense honors the override: tree ships the full payload per round
+    ring = ExchangeReplay("dense", D_SMALL).step_cost(NET, list(range(8)))
+    tree = ExchangeReplay("dense", D_SMALL, shape="tree").step_cost(
+        NET, list(range(8)))
+    assert tree.rounds == 2 * 3 and ring.rounds == 2 * 7
+    assert tree.bytes_critical == pytest.approx(6 * D_SMALL * 4)
+
+
+def test_compute_draws_are_per_worker_not_positional():
+    """A worker's compute draw depends on (seed, step, id) only, so a
+    faulted run stays comparable step-by-step with its fault-free twin."""
+    cm = ComputeModel(mean=0.05, jitter=0.1, seed=0)
+    full = cm.durations(5, (0, 1, 2, 3))
+    after_loss = cm.durations(5, (0, 2, 3))  # worker 1 failed
+    np.testing.assert_allclose(after_loss, full[[0, 2, 3]])
+
+
+def test_whole_cluster_failure_ends_run_gracefully():
+    trace = FaultTrace(tuple(TraceEvent(2, "fail", w) for w in range(8)))
+    res = simulate(_small_cfg())
+    dead = simulate(_small_cfg(), trace)
+    assert len(dead.records) == 2          # steps 0-1 completed, truncated
+    assert dead.replans[-1]["cluster_failed"] and dead.replans[-1]["p"] == 0
+    assert len(res.records) == 10          # the fault-free twin ran out
+
+
+def test_same_step_join_then_fail_is_not_lost():
+    trace = FaultTrace((TraceEvent(1, "fail", 0), TraceEvent(4, "join", 0),
+                        TraceEvent(4, "fail", 0)))
+    res = simulate(_small_cfg())
+    res2 = simulate(_small_cfg(), trace)
+    # the joiner is re-admitted and immediately re-silenced: two replans
+    # at step 4 (join, then heartbeat-detected fail), ending at P=7
+    kinds = [("join" if rp["joined"] else "fail") for rp in res2.replans]
+    assert kinds == ["fail", "join", "fail"]
+    assert res2.records[-1].p == 7
+    assert len(res.records) == len(res2.records)
+
+
+def test_simulation_is_deterministic():
+    trace = synthetic(8, 10, seed=3, fail_rate=0.1, straggle_rate=0.2,
+                      rejoin_after=4)
+    r1 = simulate(_small_cfg(), trace)
+    r2 = simulate(_small_cfg(), trace)
+    assert r1.makespan == r2.makespan
+    assert [vars(a) for a in r1.records] == [vars(b) for b in r2.records]
+    assert r1.replans == r2.replans
+
+
+def test_trace_json_roundtrip(tmp_path):
+    tr = synthetic(16, 20, seed=1, fail_rate=0.2, rejoin_after=5,
+                   straggle_rate=0.3)
+    p = tmp_path / "trace.json"
+    p.write_text(tr.to_json())
+    assert FaultTrace.load(str(p)) == tr
+    assert any(e.kind == "fail" for e in tr.events)
+
+
+def test_sim_result_json_schema():
+    res = simulate(_small_cfg(steps=3))
+    js = res.to_json()
+    assert set(js) == {"config", "totals", "replans", "steps"}
+    assert js["totals"]["steps"] == 3
+    assert js["steps"][0]["p"] == 8
+    for key in ("compute", "stall", "encode", "comm", "recover"):
+        assert js["totals"][key] >= 0.0
