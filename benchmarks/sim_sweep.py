@@ -37,19 +37,23 @@ K, WIDTH = 15_000, 2 ** 17  # fixed across d (comm_complexity geometry):
 
 
 def run_cell(method: str, p: int, d: int, buckets: int = 1,
-             steps: int = 3) -> dict:
+             steps: int = 3, bwd_chunks: int = 1,
+             topology: str = "flat") -> dict:
     cfg = SimConfig(p=p, d=d, method=method, buckets=buckets, steps=steps,
-                    k=K, rows="log", width=WIDTH,
+                    k=K, rows="log", width=WIDTH, topology=topology,
+                    bwd_chunks=bwd_chunks,
                     compute=ComputeModel(mean=0.05, jitter=0.0),
                     drop_stragglers=False)
     res = simulate(cfg)
     tot = res.totals()
     n = max(1, len(res.records))
     return {"method": method, "p": p, "d": d, "buckets": buckets,
+            "bwd_chunks": bwd_chunks, "topology": topology,
             "bytes_per_step": tot["bytes_critical"] / n,
             "fabric_bytes_per_step": tot["bytes_wire"] / n,
             "rounds_per_step": tot["rounds"] / n,
             "comm_s_per_step": tot["comm"] / n,
+            "encode_s_per_step": tot["encode"] / n,
             "step_s": tot["makespan"] / n}
 
 
@@ -134,8 +138,27 @@ def main(argv=None) -> dict:
             assert 0.7 <= cb["bytes_per_step"] / c1["bytes_per_step"] <= 1.6
             assert cb["rounds_per_step"] >= c1["rounds_per_step"]
 
+    # -- backward-interleaved readiness: exposed comm shrinks with chunks --
+    # The readiness scheduler starts a bucket's all-reduce as soon as the
+    # backward scan emits it; on the hierarchical topology (slow inter-group
+    # links = comm-bound regime) the exposed comm must STRICTLY decrease as
+    # bwd_chunks grows — the executable form of the paper's overlap claim.
+    p_b = max(ps)
+    bwd_sweep = [run_cell("gs-sgd", p_b, ds[0], buckets=8, bwd_chunks=kc,
+                          topology="hier") for kc in (1, 2, 4, 8)]
+    cells.extend(bwd_sweep)
+    exposed = [c["comm_s_per_step"] for c in bwd_sweep]
+    checks["bwd_chunks_exposed_comm"] = {
+        str(c["bwd_chunks"]): e for c, e in zip(bwd_sweep, exposed)}
+    for a, b in zip(exposed, exposed[1:]):
+        assert b < a, ("exposed comm must strictly decrease with "
+                       "bwd_chunks", exposed)
+    print(f"\nexposed exchange s/step @P={p_b} hier, 8 buckets: " + "  ".join(
+        f"K={c['bwd_chunks']}:{e:.4f}" for c, e in zip(bwd_sweep, exposed)))
+
     out = {"cells": cells, "checks": checks,
-           "sweep": {"p": ps, "d": ds, "buckets": bks}}
+           "sweep": {"p": ps, "d": ds, "buckets": bks,
+                     "bwd_chunks": [1, 2, 4, 8]}}
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, "BENCH_sim.json")
     with open(path, "w") as f:

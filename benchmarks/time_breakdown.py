@@ -136,36 +136,38 @@ def model_bucket_pipeline(d: int, n_buckets: int, *, P: int = 4,
                           k: int | None = None, width: int | None = None,
                           rows: int = 5, alpha: float = ALPHA_1GBE,
                           beta: float = BETA_1GBE, hbm: float = HBM_BW,
-                          t_backward: float = 0.0) -> dict:
+                          t_backward: float = 0.0,
+                          bwd_chunks: int | None = None) -> dict:
     """Per-bucket CommStats + modeled comm/compute-overlap saving.
 
-    Prices the bucketed gs-SGD exchange (DESIGN.md §5) on the paper's Eq. 1
-    cost model as a 3-stage pipeline per bucket:
+    Prices the bucketed gs-SGD exchange on the paper's Eq. 1 cost model
+    with the REAL readiness schedule (DESIGN.md §7, the executable
+    ``gs_sgd.exchange_interleaved`` path — no longer the old per-layer
+    readiness upper bound): the backward scan emits buckets in
+    reverse-layer order over ``bwd_chunks`` chunk events (the same
+    ``sim/replay.bucket_readiness`` timeline the cluster simulator
+    replays), each bucket's HBM-streaming encode starts when its gradient
+    is emitted, and its sketch all-reduce + second round (Eq. 1) rides the
+    3-stage ``compression.interleaved_schedule_time`` recurrence.
 
-      ready  — backward produces bucket i's gradient at (i+1)/N of
-               ``t_backward`` (buckets in gradient-production order);
-      encode — HBM-streaming sketch encode (d_b * rows reads+writes);
-      comm   — the bucket's sketch all-reduce + second round (Eq. 1).
+    Monolithic/serial = full backward, then every stage back-to-back.
+    Saving is 0 at n_buckets=1 with t_backward=0 by construction and
+    strictly positive once a second bucket exists to hide behind.
 
-    Monolithic/serial = backward, then encode, then comm back-to-back.
-    Pipelined: bucket i's comm runs while backward is still producing
-    bucket i+1's gradients and while bucket i+1 encodes. Saving is 0 at
-    n_buckets=1 by construction and strictly positive once a second bucket
-    exists to hide behind.
-
-    t_backward=0 (default) models exactly what the SHIPPED schedule in
-    ``core/gs_sgd.exchange_bucketed`` can hide (the 2-stage
-    ``compression.overlap_schedule_time`` recurrence: comm behind the next
-    bucket's encode, after accumulation completes). t_backward>0 adds
-    per-layer bucket readiness — an UPPER BOUND for the future
-    backward-interleaved schedule (ROADMAP open item), not the current
-    post-accumulation implementation.
+    t_backward=0 (default) models exactly what the post-accumulation
+    schedule in ``core/gs_sgd.exchange_bucketed`` can hide (all buckets
+    ready at once). t_backward>0 with bwd_chunks=K (default: one chunk
+    per bucket) is the shipped backward-interleaved schedule of
+    ``make_train_step(..., bwd_chunks=K)``.
     """
+    from repro.sim.replay import bucket_readiness, event_times
+
     if k is None or width is None:
         k, width = paper_geometry(d)
     base = comp.make("gs-sgd", k=k, rows=rows, width=width)
     bc = comp.bucketize(base, comp.even_bucket_sizes(d, n_buckets))
     n = bc.spec.n
+    kc = n if bwd_chunks is None else max(1, int(bwd_chunks))
     per, t_enc, t_comm = [], [], []
     for c, db in zip(bc.parts, bc.spec.sizes):
         stats = c.comm_stats(db, P)
@@ -174,12 +176,14 @@ def model_bucket_pipeline(d: int, n_buckets: int, *, P: int = 4,
                     "t_comm": stats.time(alpha, beta)})
         t_enc.append(hbm_encode_time(db, c.sketch.rows, hbm=hbm))
         t_comm.append(stats.time(alpha, beta))
-    ready = [(i + 1) * t_backward / n for i in range(n)]
-    serial, pipelined = comp.overlap_schedule_time(t_enc, t_comm,
-                                                   ready=ready)
-    return {"n_buckets": n, "per_bucket": per,
+    ev_t = event_times(t_backward, kc)
+    ready = [ev_t[e] for e in bucket_readiness(bc.spec.offsets,
+                                               bc.spec.sizes, d, kc)]
+    serial, pipelined, exposed, _ = comp.interleaved_schedule_time(
+        t_enc, t_comm, ready, t_backward=t_backward)
+    return {"n_buckets": n, "bwd_chunks": kc, "per_bucket": per,
             "t_serial": serial, "t_pipelined": pipelined,
-            "overlap_saving": serial - pipelined}
+            "t_exposed": exposed, "overlap_saving": serial - pipelined}
 
 
 def main() -> dict:
@@ -201,24 +205,28 @@ def main() -> dict:
                   f" tot {tot * 1e3:7.1f}ms | accel-modeled tot "
                   f"{tot_m * 1e3:6.1f}ms")
         # bucketed gs-sgd: per-bucket CommStats + modeled overlap saving.
-        # 'shipped' = the post-accumulation encode/comm pipeline we run;
-        # 'readiness bound' = the same buckets with per-layer gradient
-        # readiness (future backward-interleaved schedule, ROADMAP item).
+        # 'post-accum' = the post-accumulation encode/comm pipeline
+        # (exchange_bucketed); 'interleaved' = the REAL backward-
+        # interleaved readiness schedule (exchange_interleaved with
+        # bwd_chunks=n_b), priced by the same 3-stage recurrence the
+        # cluster simulator replays (DESIGN.md §7).
         d = per["gs-sgd"]["d"]
         tb = per["gs-sgd"]["t_compu_model"]  # accel-modeled fwd+bwd
         per["bucketed"] = {}
         for n_b in (1, 4, 8):
             r = model_bucket_pipeline(d, n_b)
-            bound = model_bucket_pipeline(d, n_b, t_backward=tb)
-            r["readiness_bound"] = {k: bound[k] for k in
-                                    ("t_serial", "t_pipelined",
-                                     "overlap_saving")}
+            sched = model_bucket_pipeline(d, n_b, t_backward=tb,
+                                          bwd_chunks=n_b)
+            r["interleaved"] = {k: sched[k] for k in
+                                ("t_serial", "t_pipelined", "t_exposed",
+                                 "overlap_saving")}
             per["bucketed"][str(n_b)] = r
             print(f"{model:9s} gs-sgd x{r['n_buckets']:<2d} buckets: "
                   f"serial {r['t_serial'] * 1e3:6.2f}ms pipelined "
                   f"{r['t_pipelined'] * 1e3:6.2f}ms saving "
-                  f"{r['overlap_saving'] * 1e3:6.3f}ms (readiness bound "
-                  f"{bound['overlap_saving'] * 1e3:6.3f}ms) | per-bucket "
+                  f"{r['overlap_saving'] * 1e3:6.3f}ms (interleaved "
+                  f"{sched['overlap_saving'] * 1e3:6.3f}ms, exposed "
+                  f"{sched['t_exposed'] * 1e3:6.3f}ms) | per-bucket "
                   f"bytes {[int(b['bytes']) for b in r['per_bucket']]}")
         results[model] = per
     os.makedirs(OUT, exist_ok=True)

@@ -523,14 +523,26 @@ class BucketedCommStats:
         return sum(s.time(alpha, beta) for s in self.per_bucket)
 
 
+def _pipeline_chains(t_compute, t_comm, ready) -> tuple[float, float]:
+    """(encode-chain end, comm-chain end) of the bucket pipeline: bucket
+    i's encode starts once its input is ready and the previous encode
+    finished; its comm starts when both its encode and bucket i-1's comm
+    have finished — the classic pipeline recurrence. The single source of
+    the recurrence for ``overlap_schedule_time`` /
+    ``interleaved_schedule_time`` / the sim replay."""
+    done_enc = done_comm = 0.0
+    for tc, tm, rd in zip(t_compute, t_comm, ready):
+        done_enc = max(done_enc, float(rd)) + float(tc)
+        done_comm = max(done_comm, done_enc) + float(tm)
+    return done_enc, done_comm
+
+
 def overlap_schedule_time(t_compute, t_comm,
                           ready=None) -> tuple[float, float]:
     """(serial, pipelined) totals for the encode->comm bucket pipeline.
 
-    Serial = all stages back-to-back. Pipelined: bucket i's encode starts
-    once its input is ready and the previous encode finished; its comm
-    starts when both its encode and bucket i-1's comm have finished — the
-    classic pipeline recurrence. The saving is 0 for a single bucket.
+    Serial = all stages back-to-back; pipelined = the comm chain's end
+    under ``_pipeline_chains``. The saving is 0 for a single bucket.
 
     ready: optional per-bucket gradient-readiness times (monotone
     nondecreasing, e.g. (i+1)/N of backward) for modeling a
@@ -543,25 +555,68 @@ def overlap_schedule_time(t_compute, t_comm,
     ready = [0.0] * len(t_compute) if ready is None else [
         float(r) for r in ready]
     serial = (ready[-1] if ready else 0.0) + sum(t_compute) + sum(t_comm)
-    done_enc = done_comm = 0.0
-    for tc, tm, rd in zip(t_compute, t_comm, ready):
-        done_enc = max(done_enc, rd) + tc
-        done_comm = max(done_comm, done_enc) + tm
+    _, done_comm = _pipeline_chains(t_compute, t_comm, ready)
     return serial, done_comm
+
+
+_MIN_BUCKET_WIDTH = 256  # smallest usable sketch row (pow2)
+
+
+def interleaved_schedule_time(t_compute, t_comm, ready, *,
+                              t_backward: float | None = None
+                              ) -> tuple[float, float, float, float]:
+    """3-stage backward/encode/comm recurrence of the readiness scheduler.
+
+    Models ``core/gs_sgd.exchange_interleaved``: stage 0 is the backward
+    scan, which emits bucket i's gradient at ``ready[i]`` (any order —
+    buckets are re-sorted into readiness order here, exactly the order the
+    real scheduler exchanges them); stage 1 is the per-bucket encode chain
+    (one encode at a time, starting once the bucket is ready and the
+    previous encode finished); stage 2 is the comm chain (a bucket's
+    all-reduce starts when its encode and the previous bucket's comm are
+    done).
+
+    Returns ``(serial, pipelined, exposed, enc_done)``: serial is the
+    post-accumulation baseline (full backward, then every stage
+    back-to-back); pipelined is when the last comm finishes; exposed is
+    the wall-clock the exchange adds past the end of backward
+    (``t_backward``, default ``max(ready)``) — the quantity interleaving
+    exists to shrink; enc_done is the encode chain's end (the sim replay
+    splits exposed into encode/comm overhang with it). ``chunks=1`` (all
+    ready at t_backward) reduces to ``overlap_schedule_time`` shifted by
+    t_backward.
+    """
+    order = sorted(range(len(ready)), key=lambda i: (ready[i], i))
+    tc = [float(t_compute[i]) for i in order]
+    tm = [float(t_comm[i]) for i in order]
+    rd = [float(ready[i]) for i in order]
+    serial = (rd[-1] if rd else 0.0) + sum(tc) + sum(tm)
+    enc_done, pipelined = _pipeline_chains(tc, tm, rd)
+    t_b = (max(rd) if rd else 0.0) if t_backward is None else float(t_backward)
+    return serial, pipelined, max(0.0, pipelined - t_b), enc_done
 
 
 def _scale_bucket(base, d_bucket: int, d_total: int, i: int):
     """Per-bucket compressor: k and sketch width scaled by the bucket's
-    share of coordinates (width re-rounded to a power of two, floored so
-    tiny buckets keep a usable sketch); per-bucket hash seed decorrelates
-    collisions across buckets."""
+    share of coordinates; per-bucket hash seed decorrelates collisions
+    across buckets.
+
+    Degenerate-geometry guards: a tiny bucket's scaled k is clamped to
+    >= 1 (round() alone would hand a 0-k compressor to top_k and crash at
+    trace time), and the width is snapped to the power-of-two FLOOR of the
+    proportional share, never below ``_MIN_BUCKET_WIDTH`` — SketchConfig
+    rounds widths UP, which for a just-over-a-power bucket share doubled
+    the aggregate sketch payload versus the monolithic geometry.
+    """
     frac = d_bucket / d_total
     out = base
     if hasattr(base, "k"):
         out = dataclasses.replace(
             out, k=max(1, min(d_bucket, round(base.k * frac))))
     if isinstance(base, _SketchBased):
-        width = max(256, math.ceil(base.sketch.width * frac))
+        share = max(1.0, base.sketch.width * frac)
+        width = 1 << int(math.floor(math.log2(share)))
+        width = min(base.sketch.width, max(_MIN_BUCKET_WIDTH, width))
         sk = dataclasses.replace(base.sketch, width=width,
                                  seed=base.sketch.seed + i)
         out = dataclasses.replace(out, sketch=sk)

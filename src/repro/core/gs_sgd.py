@@ -38,8 +38,9 @@ import jax.numpy as jnp
 
 from repro.core import compression as comp
 from repro.models.common import ArchConfig, ShardCtx
-from repro.models.flatten import (SEG_NAMES, FlatSpec, bucket_sizes,
-                                  make_flat_spec, pack_segs, unpack_segs)
+from repro.models.flatten import (SEG_NAMES, BucketPlan, FlatSpec,
+                                  bucket_plan, bucket_sizes, make_flat_spec,
+                                  pack_segs, packed_offsets, unpack_segs)
 from repro.models import model as mdl
 from repro.optim.optimizers import Optimizer
 
@@ -169,6 +170,98 @@ def exchange_bucketed(bc: "comp.BucketedCompressor", ef_state, g_flat,
     return upd, ef_new, stats
 
 
+def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
+                         ef_state, bwd_steps, top_grads, shapes: dict, *,
+                         axis, nworkers: int, key=None, include=None):
+    """Readiness-driven bucketed exchange interleaved with backward chunks.
+
+    Drives the backward itself: ``bwd_steps`` / ``top_grads`` come from
+    ``model.chunked_loss_vjp`` and emit gradient slices in reverse-chunk
+    order (embed+head last). After each emission event, every bucket whose
+    packed coordinate range is now complete (``plan.readiness``) is
+    assembled, encoded, and its sketch all-reduce issued — while the
+    remaining chunks' backward VJPs are still ahead in program order, so
+    XLA's latency-hiding scheduler can run the collective under backward
+    compute. Recovery is skewed one bucket behind (the DESIGN.md §5
+    pattern, now fed by §7's readiness events):
+
+        bwd(K-1); enc(b0); red(b0); bwd(K-2); enc(b1); red(b1); rec(b0); ...
+
+    Buckets cover disjoint coordinate ranges and each bucket's chain is
+    the SAME ops as ``exchange_bucketed``'s (same geometry, same per-bucket
+    key fold by packed index), so numerics are identical to the
+    post-accumulation scheduler for any chunk count — pinned bit-exactly
+    at ``chunks=1`` by tests/test_readiness.py. Returns (upd_sum, ef_new,
+    BucketedCommStats) with buckets in packed order.
+    """
+    parts, spec = bc.parts, bc.spec
+    n = spec.n
+    offs = packed_offsets(shapes)
+    f_cs = int(shapes["cycles_s"][-1])
+    f_cr = int(shapes["cycles_r"][-1])
+    by_event: dict[int, list[int]] = {}
+    for i in plan.order:
+        by_event.setdefault(plan.readiness[i], []).append(i)
+
+    pieces: list[tuple[int, Array]] = []   # (packed offset, flat grad slice)
+
+    def assemble(i: int) -> Array:
+        o, s = spec.offsets[i], spec.sizes[i]
+        got = []
+        for off, arr in pieces:
+            lo, hi = max(o, off), min(o + s, off + arr.shape[0])
+            if lo < hi:
+                got.append((lo, jax.lax.slice_in_dim(arr, lo - off, hi - off)))
+        got.sort(key=lambda t: t[0])
+        assert sum(a.shape[0] for _, a in got) == s, (i, o, s)
+        return got[0][1] if len(got) == 1 else jnp.concatenate(
+            [a for _, a in got])
+
+    us: list = [None] * n
+    sk_sum: list = [None] * n
+    scale: list = [None] * n
+    outs: list = [None] * n
+    launched: list[int] = []
+
+    def recover(i: int) -> None:
+        kb = (key if key is None or n == 1
+              else jax.random.fold_in(key, i))
+        outs[i] = parts[i].stage_recover(
+            us[i], sk_sum[i], scale[i], axis=axis, nworkers=nworkers,
+            key=kb, include=include)
+
+    n_chunks = len(bwd_steps)
+    for ev in range(plan.n_events):
+        if ev < n_chunks:
+            (a, b), d_cs, d_cr = bwd_steps[ev]()
+            if d_cs.size:
+                pieces.append((offs["cycles_s"] + a * f_cs,
+                               d_cs.reshape(-1)))
+            if d_cr.size:
+                pieces.append((offs["cycles_r"] + a * f_cr,
+                               d_cr.reshape(-1)))
+        if ev == n_chunks - 1:  # top segments finalize with the last chunk
+            d_ts, d_tr = top_grads()
+            if d_ts.size:
+                pieces.append((offs["top_s"], d_ts))
+            if d_tr.size:
+                pieces.append((offs["top_r"], d_tr))
+        for i in by_event.get(ev, []):
+            us[i], sk = parts[i].stage_encode(ef_state[i], assemble(i))
+            sk_sum[i], scale[i] = parts[i].stage_reduce(
+                sk, axis=axis, nworkers=nworkers, include=include)
+            launched.append(i)
+            while len(launched) > 1:  # recover, one bucket behind
+                recover(launched.pop(0))
+    for i in launched:
+        recover(i)
+    upd = spec.join([outs[i][0] for i in range(n)])
+    ef_new = tuple(outs[i][1] for i in range(n))
+    stats = comp.BucketedCommStats(tuple(outs[i][2] for i in range(n)),
+                                   label=bc.name + "|interleaved")
+    return upd, ef_new, stats
+
+
 # ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------
@@ -186,6 +279,8 @@ class TrainStep:
     d_local: int                  # flat coords per device (compressor input)
     n_buckets: int = 1            # gradient-exchange buckets (1 = monolithic)
     overlap: bool = True          # pipelined bucket schedule (n_buckets > 1)
+    bwd_chunks: int = 0           # backward chunks (0 = monolithic backward)
+    plan: BucketPlan | None = None  # readiness plan (bwd_chunks > 0)
 
     def init_state(self, key: Array, opt: Optimizer) -> Any:
         """Concrete state for single-device (tp=1, dp=1) smoke/test runs."""
@@ -215,7 +310,8 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                     clip_norm: float | None = None,
                     fs: FlatSpec | None = None,
                     buckets: int | None = None,
-                    overlap: bool = True) -> TrainStep:
+                    overlap: bool = True,
+                    bwd_chunks: int | None = None) -> TrainStep:
     """Build the per-device train step (to be wrapped in shard_map/vmap).
 
     compressor_name=None or 'dense' -> dense psum baseline. In fsdp mode
@@ -236,6 +332,16 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     exercises the bucketed code path with numerics identical to monolithic.
     overlap: pipeline bucket i's all-reduce with bucket i+1's encode
     (numerically identical either way; see ``exchange_bucketed``).
+
+    bwd_chunks: None -> monolithic backward (post-accumulation exchange,
+    the PR 1 path). An int >= 1 splits the cycle scan into that many
+    autodiff chunks (``model.chunked_loss_vjp``) and, when the exchange is
+    bucketed, staged and overlap=True, drives the readiness scheduler
+    ``exchange_interleaved`` — buckets begin their encode/all-reduce as the
+    backward scan emits them (DESIGN.md §7). bwd_chunks=1 runs the
+    readiness path with a single chunk: bit-exact vs the bwd_chunks=None
+    step. Incompatible with ``microbatch`` (the exchange must see the one
+    accumulated gradient it interleaves with).
     """
     import math as _math
 
@@ -244,6 +350,10 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     gathers = _gather_closures(ma, dp_mode, dtype)
     shapes = local_seg_shapes(fs, ma, dp_mode)
     d_local = sum(_math.prod(s) for s in shapes.values())
+    if bwd_chunks is not None and microbatch is not None:
+        raise ValueError("bwd_chunks interleaves the exchange with ONE "
+                         "backward pass; combining it with microbatch "
+                         "accumulation is not supported")
 
     # In 'dp' the compressor sums raw per-worker grads over all dp axes; in
     # 'fsdp' backward's psum_scatter has already summed over 'data', so only
@@ -257,6 +367,7 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
         comp_n = ma.pod
 
     compressor = None
+    plan = None
     bucketed = bool(buckets is not None and comp_axes)
     if comp_axes and (compressor_name not in (None, "dense") or bucketed):
         if compressor_name in (None, "dense"):
@@ -266,8 +377,16 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
         else:
             compressor = comp.make(compressor_name, **(compressor_kw or {}))
         if bucketed:
-            compressor = comp.bucketize(compressor,
-                                        bucket_sizes(shapes, buckets))
+            plan = bucket_plan(shapes, buckets, bwd_chunks or 1)
+            assert plan.sizes == bucket_sizes(shapes, buckets)
+            compressor = comp.bucketize(compressor, plan.sizes)
+
+    # Readiness interleave needs a staged bucketed compressor and the
+    # pipelined schedule; otherwise a chunked backward still runs but the
+    # exchange stays post-accumulation (gradient assembled after backward).
+    interleave = (bwd_chunks is not None and plan is not None and overlap
+                  and all(hasattr(c, "stage_encode")
+                          for c in compressor.parts))
 
     def train_step(state: dict, batch: dict,
                    include: Array | None = None) -> tuple[dict, dict]:
@@ -288,7 +407,16 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
 
         b_loc = batch["tokens"].shape[0]
         mb = microbatch or b_loc
-        if mb >= b_loc:
+        bwd_steps = top_grads = None
+        if bwd_chunks is not None:
+            # Chunked backward: per-chunk VJPs emit gradient slices in
+            # reverse order (seeded with 1/tp, mirroring loss_of's scaling)
+            loss, bwd_steps, top_grads = mdl.chunked_loss_vjp(
+                cfg, ctx, fs, params, batch, chunks=bwd_chunks,
+                gathers=gathers, remat=remat, grad_seed=inv_tp)
+            loss = inv_tp * loss
+            grads = None
+        elif mb >= b_loc:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
         else:
             assert b_loc % mb == 0, (b_loc, mb)
@@ -308,26 +436,47 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                 acc_body, (jnp.float32(0.0), zeros), slices)
             loss = loss / n_mb
             grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
-        g_flat = pack_segs(grads)
 
+        def flat_of_chunks():
+            # post-accumulation fallback for a chunked backward: drain the
+            # VJP steps, reassemble pack_segs order (top_s, top_r, cycle
+            # rows ascending per segment)
+            cs_parts, cr_parts = [], []
+            for step in bwd_steps:
+                (a, _), d_cs, d_cr = step()
+                cs_parts.append((a, d_cs))
+                cr_parts.append((a, d_cr))
+            d_ts, d_tr = top_grads()
+            rows = lambda ps: [p.reshape(-1) for _, p in sorted(ps)]  # noqa: E731
+            return jnp.concatenate([d_ts.reshape(-1), d_tr.reshape(-1)]
+                                   + rows(cs_parts) + rows(cr_parts))
+
+        kw = {"include": include} if include is not None else {}
         if compressor is not None:
-            kw = {"include": include} if include is not None else {}
             ef32 = jax.tree_util.tree_map(
                 lambda a: a.astype(jnp.float32), ef)
-            if isinstance(compressor, comp.BucketedCompressor):
-                upd, ef_new, _ = exchange_bucketed(
-                    compressor, ef32, g_flat, axis=comp_axes,
-                    nworkers=comp_n, overlap=overlap, **kw)
+            if interleave:
+                upd, ef_new, _ = exchange_interleaved(
+                    compressor, plan, ef32, bwd_steps, top_grads, shapes,
+                    axis=comp_axes, nworkers=comp_n, **kw)
             else:
-                upd, ef_new, _ = compressor.step(
-                    ef32, g_flat, axis=comp_axes, nworkers=comp_n, **kw)
+                g_flat = (flat_of_chunks() if grads is None
+                          else pack_segs(grads))
+                if isinstance(compressor, comp.BucketedCompressor):
+                    upd, ef_new, _ = exchange_bucketed(
+                        compressor, ef32, g_flat, axis=comp_axes,
+                        nworkers=comp_n, overlap=overlap, **kw)
+                else:
+                    upd, ef_new, _ = compressor.step(
+                        ef32, g_flat, axis=comp_axes, nworkers=comp_n, **kw)
             ef_new = jax.tree_util.tree_map(
                 lambda new, old: new.astype(old.dtype), ef_new, ef)
-        elif comp_axes:                    # dense baseline over dp axes
-            upd = jax.lax.psum(g_flat, comp_axes)
-            ef_new = ef
-        else:                              # fsdp single-pod: nothing left
-            upd = g_flat                   # already summed over 'data'
+        else:
+            g_flat = flat_of_chunks() if grads is None else pack_segs(grads)
+            if comp_axes:                  # dense baseline over dp axes
+                upd = jax.lax.psum(g_flat, comp_axes)
+            else:                          # fsdp single-pod: nothing left
+                upd = g_flat               # already summed over 'data'
             ef_new = ef
 
         g_mean = upd / ma.dp_size
@@ -360,7 +509,8 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                      n_buckets=(compressor.spec.n
                                 if isinstance(compressor,
                                               comp.BucketedCompressor) else 1),
-                     overlap=overlap)
+                     overlap=overlap, bwd_chunks=(bwd_chunks or 0),
+                     plan=plan)
 
 
 # ---------------------------------------------------------------------------

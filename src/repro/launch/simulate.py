@@ -66,6 +66,31 @@ def _timeline(res, around: int = 2) -> None:
               + "; ".join(evs))
 
 
+def curves_json(res) -> dict:
+    """Machine-readable sim timeline, shaped like ``comm_complexity.json``.
+
+    Top-level ``model`` (geometry/provenance) / ``curves`` (flat rows, one
+    per simulated step, with bytes/rounds/Eq.1-style time) / ``checks`` —
+    so sim timelines diff with the analytic curves in CI tooling.
+    """
+    cfg = res.config
+    model = {"p": cfg.p, "d": cfg.d, "method": cfg.method,
+             "buckets": cfg.buckets, "bwd_chunks": cfg.bwd_chunks,
+             "bwd_frac": cfg.bwd_frac, "topology": cfg.topology,
+             "link": cfg.link, "shape": cfg.shape,
+             "group_size": cfg.group_size, "overlap": cfg.overlap,
+             "k": cfg.k, "rows": cfg.rows, "width": cfg.width,
+             "seed": cfg.seed}
+    curves = [{"method": cfg.method, "step": r.step, "p": r.p,
+               "generation": r.generation, "bytes": r.bytes_critical,
+               "bytes_wire": r.bytes_wire, "rounds": r.rounds,
+               "compute": r.compute, "stall": r.stall, "encode": r.encode,
+               "comm": r.comm, "recover": r.recover, "time_sim": r.total,
+               "dropped": list(r.dropped)} for r in res.records]
+    return {"model": model, "methods": [cfg.method], "curves": curves,
+            "totals": res.totals(), "replans": res.replans, "checks": {}}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(
         description="discrete-event gs-SGD cluster simulator")
@@ -88,6 +113,13 @@ def main(argv=None) -> dict:
                     choices=["1gbe", "10gbe", "ici"])
     ap.add_argument("--group-size", type=int, default=8)
     ap.add_argument("--no-overlap", action="store_true")
+    ap.add_argument("--bwd-chunks", type=int, default=1,
+                    help="backward-interleaved readiness chunks: buckets "
+                         "start their exchange as the backward scan emits "
+                         "them (1 = post-accumulation pipeline)")
+    ap.add_argument("--bwd-frac", type=float, default=2 / 3,
+                    help="backward share of per-step compute (readiness "
+                         "clock for --bwd-chunks > 1)")
     ap.add_argument("--compute-mean", type=float, default=0.1,
                     help="mean seconds of fwd+bwd per step")
     ap.add_argument("--compute-jitter", type=float, default=0.08)
@@ -101,6 +133,10 @@ def main(argv=None) -> dict:
                          "'fail_rate=0.05,straggle_rate=0.1,rejoin_after=20'")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write full JSON result here")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write machine-readable curves JSON (same shape "
+                         "as benchmarks/comm_complexity.py: model/curves/"
+                         "checks) for CI diffing")
     args = ap.parse_args(argv)
 
     trace = FaultTrace()
@@ -119,6 +155,7 @@ def main(argv=None) -> dict:
         steps=args.steps, k=args.k, rows=rows, width=args.width,
         shape=args.shape, topology=args.topology, link=args.link,
         group_size=args.group_size, overlap=not args.no_overlap,
+        bwd_chunks=args.bwd_chunks, bwd_frac=args.bwd_frac,
         compute=ComputeModel(mean=args.compute_mean,
                              jitter=args.compute_jitter, seed=args.seed),
         heartbeat_timeout=args.heartbeat_timeout,
@@ -144,6 +181,10 @@ def main(argv=None) -> dict:
     if args.out:
         res.dump(args.out)
         print(f"wrote {args.out}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(curves_json(res), f, indent=1)
+        print(f"wrote {args.json}")
     return tot
 
 

@@ -54,11 +54,16 @@ def build(args):
         compressor_name=None if args.compressor == "none" else args.compressor,
         compressor_kw=ckw or None, remat=not args.no_remat,
         dtype=jnp.float32, microbatch=args.microbatch,
-        buckets=args.buckets, overlap=not args.no_overlap)
+        buckets=args.buckets, overlap=not args.no_overlap,
+        bwd_chunks=args.bwd_chunks)
     if ts.n_buckets > 1:
         sizes = ts.compressor.spec.sizes
         print(f"bucketed exchange: {ts.n_buckets} buckets "
               f"(sizes {list(sizes)}), overlap={'off' if args.no_overlap else 'on'}")
+    if ts.bwd_chunks:
+        ready = list(ts.plan.readiness) if ts.plan is not None else None
+        print(f"backward-interleaved readiness: {ts.bwd_chunks} chunk(s), "
+              f"bucket readiness {ready}")
     return cfg, opt, ma, ts
 
 
@@ -86,6 +91,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable the pipelined bucket schedule "
                          "(sequential per-bucket exchange)")
+    ap.add_argument("--bwd-chunks", type=int, default=None,
+                    help="split the backward scan into K autodiff chunks "
+                         "and start each bucket's exchange as its gradient "
+                         "is emitted (None = monolithic backward; 1 = "
+                         "readiness path, bit-exact vs monolithic)")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)

@@ -249,6 +249,102 @@ def bucket_sizes(shapes: dict[str, tuple[int, ...]],
     return tuple(sizes)
 
 
+def chunk_plan(n_cycles: int, n_chunks: int) -> tuple[tuple[int, int], ...]:
+    """Split cycles [0, n) into <= n_chunks contiguous [a, b) chunks.
+
+    Sizes differ by at most one. The backward scan consumes chunks in
+    REVERSE order (chunk n_chunks-1's VJP runs first), so the chunk list
+    here is in forward (cycle-index) order and emission order is its
+    reverse — see ``model.chunked_loss_vjp``.
+    """
+    k = max(1, min(int(n_chunks), int(n_cycles)))
+    base, rem = divmod(int(n_cycles), k)
+    bounds, a = [], 0
+    for i in range(k):
+        b = a + base + (1 if i < rem else 0)
+        bounds.append((a, b))
+        a = b
+    return tuple(bounds)
+
+
+def packed_offsets(shapes: dict[str, tuple[int, ...]]) -> dict[str, int]:
+    """Start offset of each segment within the ``pack_segs`` flat vector."""
+    out, off = {}, 0
+    for k in SEG_NAMES:
+        out[k] = off
+        off += math.prod(shapes[k])
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Readiness-aware bucket partition for the backward-interleaved exchange.
+
+    ``sizes`` is exactly ``bucket_sizes(shapes, n_buckets)`` — the packed-
+    order contiguous partition PR 1's pipeline uses, so per-bucket
+    compressor geometry (and numerics) are unchanged and the
+    ``bwd_chunks=1`` path stays bit-exact against the post-accumulation
+    scheduler. What this adds is the *readiness index*: backward emits
+    gradients as K+1 events — chunk K-1's cycle rows first (event 0), down
+    to chunk 0 (event K-1), with the top segments (embed + head + shared)
+    finalizing last (event K, after every chunk's contribution has
+    accumulated). ``readiness[i]`` is the earliest event after which bucket
+    i's packed coordinate range is fully emitted; the scheduler exchanges
+    buckets in readiness order (reverse-layer order, embed+head last).
+    """
+
+    sizes: tuple[int, ...]          # packed-order bucket sizes
+    readiness: tuple[int, ...]      # per bucket: emission event index
+    n_events: int                   # n_chunks + 1 (the +1 is the top event)
+    chunks: tuple[tuple[int, int], ...]  # cycle-row [a, b) per chunk
+
+    @property
+    def n(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def order(self) -> tuple[int, ...]:
+        """Exchange order: by readiness, packed index breaking ties."""
+        return tuple(sorted(range(self.n),
+                            key=lambda i: (self.readiness[i], i)))
+
+
+def bucket_plan(shapes: dict[str, tuple[int, ...]], n_buckets: int,
+                n_chunks: int) -> BucketPlan:
+    """Bucket partition + per-bucket readiness for a K-chunk backward.
+
+    Bucket boundaries come from ``bucket_sizes`` (row atoms keep cycle
+    layers whole, so boundaries align with chunk gradient-emission order
+    whenever n_buckets >= n_chunks); readiness is the max emission event
+    over the bucket's packed range.
+    """
+    sizes = bucket_sizes(shapes, n_buckets)
+    n_cycles = int(shapes["cycles_s"][0])
+    bounds = chunk_plan(n_cycles, n_chunks)
+    k = len(bounds)
+    offs = packed_offsets(shapes)
+    f_cs = int(shapes["cycles_s"][-1])
+    f_cr = int(shapes["cycles_r"][-1])
+    # event index per packed interval: top segments finalize last (event k)
+    intervals: list[tuple[int, int, int]] = [
+        (offs["top_s"], offs["cycles_s"], k)]
+    for c, (a, b) in enumerate(bounds):
+        ev = k - 1 - c                     # reverse-order emission
+        intervals.append((offs["cycles_s"] + a * f_cs,
+                          offs["cycles_s"] + b * f_cs, ev))
+        intervals.append((offs["cycles_r"] + a * f_cr,
+                          offs["cycles_r"] + b * f_cr, ev))
+    readiness = []
+    off = 0
+    for s in sizes:
+        ev = max((e for lo, hi, e in intervals
+                  if lo < off + s and off < hi), default=k)
+        readiness.append(ev)
+        off += s
+    return BucketPlan(sizes=sizes, readiness=tuple(readiness),
+                      n_events=k + 1, chunks=bounds)
+
+
 def pack_segs(segs: dict[str, Array]) -> Array:
     """Segment dict -> one flat f32 vector (compressor's view)."""
     return jnp.concatenate([segs[k].reshape(-1).astype(jnp.float32)

@@ -119,6 +119,54 @@ def _apply_cycle(cfg: ArchConfig, ctx: ShardCtx, cyc_p: dict,
     return x, aux, (new_cache if cache is not None else None)
 
 
+def _cycle_scan_body(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec,
+                     shared_p: dict | None, pos: Array, mode: str,
+                     cross_kv: Array | None, kv_len: Array | None,
+                     gs_, gr_):
+    """Scan body over (vs, vr, cyc_cache) triples — the single source of
+    the per-cycle step, shared by ``_backbone`` and the chunked training
+    path so the two cannot drift."""
+    def body(carry, xs):
+        x, aux = carry
+        vs, vr, cyc_cache = xs
+        cyc_p = fs.cycle_params(gs_(vs), gr_(vr), ctx.dtype)
+        x, a, new_c = _apply_cycle(cfg, ctx, cyc_p, shared_p, x, pos, mode,
+                                   cross_kv, cyc_cache, kv_len)
+        return (x, aux + a), new_c
+
+    return body
+
+
+def _scan_cycles(cyc, carry, cs: Array, cr: Array, remat: bool):
+    """Scan ``cyc`` over cycle rows with the sqrt-n nested-remat structure.
+
+    A flat scan's backward stores the carry at every cycle (n * B*S*d —
+    tens of GB at 94 layers); a two-level scan with a remat'd outer body
+    stores ~(n1 + n2) carries instead. Shared by the monolithic training
+    scan and each chunk of ``chunked_loss_vjp`` (applied within the chunk's
+    cycle range, so the chunk VJP's residual footprint stays sublinear).
+    """
+    n = cs.shape[0]
+    n2 = int(math.isqrt(n))
+    if remat and n2 >= 2:
+        n1, rem = n // n2, n % n2
+
+        def outer(c, vs):
+            c, _ = jax.lax.scan(cyc, c, vs)
+            return c, None
+
+        main = jax.tree_util.tree_map(
+            lambda a: a[:n1 * n2].reshape((n1, n2) + a.shape[1:]),
+            (cs, cr))
+        carry, _ = jax.lax.scan(jax.checkpoint(outer), carry, main)
+        if rem:
+            tail = jax.tree_util.tree_map(lambda a: a[n1 * n2:], (cs, cr))
+            carry, _ = jax.lax.scan(cyc, carry, tail)
+    else:
+        carry, _ = jax.lax.scan(cyc, carry, (cs, cr))
+    return carry
+
+
 def _backbone(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
               tokens: Array, pos: Array, mode: str,
               cross_kv: Array | None = None, cache: Any = None,
@@ -136,18 +184,11 @@ def _backbone(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
     x = embed_lookup(top["embed"], tokens, ctx)
     shared_p = top.get("shared_attn")
 
-    def body(carry, xs):
-        x, aux = carry
-        vs, vr, cyc_cache = xs
-        cyc_p = fs.cycle_params(gs_(vs), gr_(vr), ctx.dtype)
-        x, a, new_c = _apply_cycle(cfg, ctx, cyc_p, shared_p, x, pos, mode,
-                                   cross_kv, cyc_cache, kv_len)
-        return (x, aux + a), new_c
-
+    body = _cycle_scan_body(cfg, ctx, fs, shared_p, pos, mode, cross_kv,
+                            kv_len, gs_, gr_)
     if remat:
         body = jax.checkpoint(body)
     cs, cr = segs["cycles_s"], segs["cycles_r"]
-    n = fs.n_cycles
     if cache is not None:
         # Serve path: the cache rides the scan CARRY and each cycle's slice
         # is updated in place (dynamic_update_index lowers to an aliased
@@ -172,38 +213,26 @@ def _backbone(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
         x = rmsnorm(x, top["final_norm"], cfg.norm_eps)
         return x, aux, new_cache, top
     if cache is None:
-        carry = (x, jnp.float32(0.0))
-
         def cyc(c, v):
             return body(c, (v[0], v[1], None))
 
-        # sqrt-n nested-scan remat: a flat scan's backward stores the carry
-        # at every cycle (n * B*S*d — tens of GB at 94 layers); two-level
-        # scan with a remat'd outer body stores ~(n1 + n2) carries instead.
-        n2 = int(math.isqrt(n))
-        if remat and n2 >= 2:
-            n1, rem = n // n2, n % n2
-
-            def outer(c, vs):
-                c, _ = jax.lax.scan(cyc, c, vs)
-                return c, None
-
-            main = jax.tree_util.tree_map(
-                lambda a: a[:n1 * n2].reshape((n1, n2) + a.shape[1:]),
-                (cs, cr))
-            carry, _ = jax.lax.scan(jax.checkpoint(outer), carry, main)
-            if rem:
-                tail = jax.tree_util.tree_map(lambda a: a[n1 * n2:], (cs, cr))
-                carry, _ = jax.lax.scan(cyc, carry, tail)
-        else:
-            carry, _ = jax.lax.scan(cyc, carry, (cs, cr))
-        x, aux = carry
+        x, aux = _scan_cycles(cyc, (x, jnp.float32(0.0)), cs, cr, remat)
     x = rmsnorm(x, top["final_norm"], cfg.norm_eps)
     return x, aux, None, top
 
 
 def _head_w(cfg: ArchConfig, top: dict) -> Array:
     return top["embed"].T if cfg.tie_embeddings else top["head"]
+
+
+def _loss_head(cfg: ArchConfig, ctx: ShardCtx, hid: Array, aux: Array,
+               top: dict, labels: Array) -> Array:
+    """Final-norm'd hidden -> CE loss (+ MoE aux): the shared tail of
+    ``loss_fn`` and the chunked epilogue."""
+    loss = lm_loss(hid, _head_w(cfg, top), labels, cfg, ctx)
+    if cfg.n_experts:
+        loss = loss + MOE_AUX_COEF * aux / max(1, cfg.n_cycles)
+    return loss
 
 
 # ---------------------------------------------------------------------------
@@ -221,10 +250,119 @@ def loss_fn(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
     hid, aux, _, top = _backbone(cfg, ctx, fs, segs, tokens, pos, "train",
                                  cross_kv=batch.get("cross_kv"),
                                  gathers=gathers, remat=remat)
-    loss = lm_loss(hid, _head_w(cfg, top), batch["labels"], cfg, ctx)
-    if cfg.n_experts:
-        loss = loss + MOE_AUX_COEF * aux / max(1, cfg.n_cycles)
-    return loss
+    return _loss_head(cfg, ctx, hid, aux, top, batch["labels"])
+
+
+def chunked_loss_vjp(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec,
+                     segs: dict, batch: dict, *, chunks: int,
+                     gathers: Gathers = None, remat: bool = True,
+                     grad_seed: float = 1.0):
+    """Training forward with the cycle scan split into K autodiff chunks.
+
+    The monolithic ``loss_fn`` hands autodiff one opaque scan, so the full
+    backward must finish before any gradient coordinate exists. Here the
+    scan is cut at K chunk boundaries that are *visible* to autodiff
+    (``jax.vjp`` per chunk), so each chunk's VJP yields its cycle-gradient
+    slice as it completes — in reverse-chunk order, the order backward
+    physically produces them. The caller (the readiness scheduler in
+    ``core/gs_sgd.exchange_interleaved``) can then start a bucket's
+    encode/all-reduce while the remaining chunks' backward is still
+    pending; within each chunk the sqrt-n ``_scan_cycles`` remat structure
+    is preserved.
+
+    Returns ``(loss, bwd_steps, top_grads)``:
+
+      loss       — scalar, identical to ``loss_fn`` (before grad_seed).
+      bwd_steps  — K thunks to invoke STRICTLY in order. Step j runs the
+                   VJP of chunk K-1-j and returns ``((a, b), d_cs, d_cr)``:
+                   the chunk's cycle-row range and its cycles_s / cycles_r
+                   gradient slices. Step 0 also runs the loss/head
+                   epilogue's VJP; the last step also runs the embed
+                   prologue's VJP.
+      top_grads  — thunk, valid only after every bwd_step ran: the
+                   accumulated ``(d_top_s, d_top_r)`` (embed + head +
+                   shared leaves receive contributions from every chunk,
+                   so they finalize last — the final emission event).
+
+    grad_seed scales the loss cotangent (the caller's 1/tp seeding).
+    Gradients equal ``jax.grad(grad_seed * loss_fn)`` exactly: the chunk
+    composition is the same chain rule, and per-leaf cotangent sums are
+    plain commutative adds of the same terms.
+    """
+    from repro.models.flatten import chunk_plan
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    cross_kv = batch.get("cross_kv")
+    gs_, gr_ = gathers or (lambda v: v, lambda v: v)
+    ts, tr = segs["top_s"], segs["top_r"]
+    cs, cr = segs["cycles_s"], segs["cycles_r"]
+    bounds = chunk_plan(fs.n_cycles, chunks)
+    K = len(bounds)
+
+    # The top segments are gathered ONCE (like _backbone) through their own
+    # vjp stage; the per-stage cotangents accumulate on the GATHERED arrays
+    # and the gather transpose (psum_scatter under tp/fsdp sharding) runs a
+    # single time in top_grads — a K-chunk step must not multiply the
+    # top-segment collectives by K+2.
+    (g_ts, g_tr), vjp_gather = jax.vjp(lambda a, b: (gs_(a), gr_(b)), ts, tr)
+
+    def prologue(ts, tr):
+        top = fs.top_params(ts, tr, ctx.dtype)
+        return embed_lookup(top["embed"], tokens, ctx), jnp.float32(0.0)
+
+    def chunk_fn(carry, vs, vr, ts, tr):
+        top = fs.top_params(ts, tr, ctx.dtype)
+        body = _cycle_scan_body(cfg, ctx, fs, top.get("shared_attn"), pos,
+                                "train", cross_kv, None, gs_, gr_)
+        if remat:
+            body = jax.checkpoint(body)
+
+        def cyc(c, v):
+            return body(c, (v[0], v[1], None))
+
+        return _scan_cycles(cyc, carry, vs, vr, remat)
+
+    def epilogue(carry, ts, tr):
+        x, aux = carry
+        top = fs.top_params(ts, tr, ctx.dtype)
+        x = rmsnorm(x, top["final_norm"], cfg.norm_eps)
+        return _loss_head(cfg, ctx, x, aux, top, batch["labels"])
+
+    carry, vjp_pro = jax.vjp(prologue, g_ts, g_tr)
+    chunk_vjps = []
+    for a, b in bounds:
+        carry, vjp_c = jax.vjp(chunk_fn, carry, cs[a:b], cr[a:b], g_ts, g_tr)
+        chunk_vjps.append(vjp_c)
+    loss, vjp_epi = jax.vjp(epilogue, carry, g_ts, g_tr)
+
+    st: dict = {}
+
+    def make_step(j: int):
+        c = K - 1 - j
+        a, b = bounds[c]
+
+        def run():
+            if j == 0:
+                seed = jnp.asarray(grad_seed, loss.dtype)
+                st["d_carry"], st["d_ts"], st["d_tr"] = vjp_epi(seed)
+            d_carry, d_cs, d_cr, d_ts, d_tr = chunk_vjps[c](st["d_carry"])
+            st["d_carry"] = d_carry
+            st["d_ts"] = st["d_ts"] + d_ts
+            st["d_tr"] = st["d_tr"] + d_tr
+            if c == 0:  # embed transpose — the top segments' last piece
+                d_ts, d_tr = vjp_pro(st["d_carry"])
+                st["d_ts"] = st["d_ts"] + d_ts
+                st["d_tr"] = st["d_tr"] + d_tr
+            return (a, b), d_cs, d_cr
+
+        return run
+
+    def top_grads():
+        return vjp_gather((st["d_ts"], st["d_tr"]))
+
+    return loss, [make_step(j) for j in range(K)], top_grads
 
 
 def prefill_fn(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,

@@ -65,6 +65,8 @@ class SimConfig:
     intra_link: str = "ici"
     group_size: int = 8
     overlap: bool = True
+    bwd_chunks: int = 1               # backward-interleaved readiness chunks
+    bwd_frac: float = 2 / 3           # backward share of a step's compute
     compute: ComputeModel = dataclasses.field(default_factory=ComputeModel)
     heartbeat_timeout: float = 1.0    # seconds of silence before dead
     drop_stragglers: bool = True
@@ -245,12 +247,20 @@ def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
         t_compute = float(np.mean(durs[include]))
         # dropped stragglers join the collective at the deadline with a
         # zeroed sketch (include-mask semantics) — comm runs over all live.
-        # step_cost is pure in the membership, which only changes at
-        # replans — cache it so steady-state steps are O(1)
-        pc = cost_cache.get(members)
-        if pc is None:
-            pc = cost_cache[members] = rep.step_cost(
-                net, members, overlap=cfg.overlap)
+        # The expensive schedule walk (stage_times) is pure in the
+        # membership, which only changes at replans — cache it so
+        # steady-state steps stay O(buckets) even when compute jitter
+        # varies the backward duration every step. Readiness is clocked
+        # off the BARRIER (slowest included worker): a bucket's all-reduce
+        # completes no earlier than the last worker's emission.
+        interleave = cfg.bwd_chunks > 1 and cfg.overlap
+        t_bwd = barrier * cfg.bwd_frac if interleave else 0.0
+        stages = cost_cache.get(members)
+        if stages is None:
+            stages = cost_cache[members] = rep.stage_times(net, members)
+        pc = rep.step_cost(net, members, overlap=cfg.overlap,
+                           t_backward=t_bwd, bwd_chunks=cfg.bwd_chunks,
+                           stages=stages)
         records.append(StepRecord(
             step=s, t_start=loop.now, p=plan.n_workers,
             generation=plan.generation, compute=t_compute,

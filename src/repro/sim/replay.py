@@ -63,6 +63,46 @@ def default_geometry(d: int, *, k: int | None = None,
     return int(k), int(rows), int(width)
 
 
+def bucket_readiness(offsets: Sequence[int], sizes: Sequence[int], d: int,
+                     n_chunks: int) -> tuple[int, ...]:
+    """Reverse-emission readiness index per bucket on an abstract flat d.
+
+    The backward scan emits gradient coordinates from the top of the
+    packed vector downward (reverse-layer order) in ``n_chunks`` equal
+    spans: emission event e covers coords [d·(K-1-e)/K, d·(K-e)/K). A
+    bucket is ready once its LOWEST coordinate is emitted. This is the
+    sim/benchmark abstraction of the real ``flatten.bucket_plan`` (which
+    additionally pins the embed+head top segments to the final event —
+    an effect the abstract-d model folds into the last span).
+    """
+    k = max(1, int(n_chunks))
+    out = []
+    for o in offsets:
+        e = k - 1 - min(k - 1, (int(o) * k) // max(1, int(d)))
+        out.append(e)
+    return tuple(out)
+
+
+def event_times(t_backward: float, n_chunks: int) -> list[float]:
+    """Completion time of each emission event: equal chunks finish at
+    uniform fractions of the backward scan."""
+    k = max(1, int(n_chunks))
+    return [t_backward * (e + 1) / k for e in range(k)]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTimes:
+    """Per-bucket (encode, comm, recover) stage times for one membership,
+    plus the byte/round totals — the cacheable half of ``step_cost``."""
+
+    t_enc: tuple[float, ...]
+    t_comm: tuple[float, ...]
+    t_rec: tuple[float, ...]
+    bytes_wire: float
+    bytes_critical: float
+    rounds: int
+
+
 @dataclasses.dataclass(frozen=True)
 class PhaseCost:
     """One simulated step's exchange, split the way the timeline reports it.
@@ -70,7 +110,11 @@ class PhaseCost:
     encode / comm / recover are the *exposed* (wall-clock) phase times
     after the bucket pipeline's overlap; ``comm_serial`` is the
     un-overlapped sum (so ``encode + comm_serial - (encode + comm)`` is
-    the modeled overlap saving). Bytes/rounds are per step, critical =
+    the modeled overlap saving). With a backward-interleaved schedule
+    (``bwd_chunks > 1``), "exposed" additionally excludes whatever the
+    readiness pipeline hid UNDER the backward scan — encode/comm are the
+    overhang past the end of backward, the quantity DESIGN.md §7's
+    3-stage recurrence minimizes. Bytes/rounds are per step, critical =
     the per-worker Eq. 1 payload term the complexity claims are about.
     """
 
@@ -194,8 +238,15 @@ class ExchangeReplay:
 
     # -- one step ----------------------------------------------------------
 
-    def step_cost(self, net: netm.NetworkModel, ids: Sequence[int],
-                  *, overlap: bool = True) -> PhaseCost:
+    def stage_times(self, net: netm.NetworkModel,
+                    ids: Sequence[int]) -> "StageTimes":
+        """Per-bucket stage times + byte/round totals for one membership.
+
+        This is the expensive part of pricing a step (it walks the real
+        collective schedules over the topology); it depends only on the
+        live-id list, so callers (``sim/cluster.py``) cache it per
+        membership and re-run only the cheap ``step_cost`` recurrence when
+        the backward duration varies step-to-step (compute jitter)."""
         ids = list(ids)
         t_enc, t_comm, t_rec = [], [], []
         b_wire = b_crit = 0.0
@@ -209,11 +260,39 @@ class ExchangeReplay:
             b_wire += wire
             b_crit += crit
             n_rounds += len(rounds)
-        serial, pipelined = comp.overlap_schedule_time(t_enc, t_comm)
-        encode = sum(t_enc)
+        return StageTimes(t_enc=tuple(t_enc), t_comm=tuple(t_comm),
+                          t_rec=tuple(t_rec), bytes_wire=b_wire,
+                          bytes_critical=b_crit, rounds=n_rounds)
+
+    def step_cost(self, net: netm.NetworkModel, ids: Sequence[int],
+                  *, overlap: bool = True, t_backward: float = 0.0,
+                  bwd_chunks: int = 1,
+                  stages: "StageTimes | None" = None) -> PhaseCost:
+        """Price one exchange. ``bwd_chunks > 1`` replays the readiness
+        timeline: per-bucket ready times from the reverse-emission chunk
+        schedule feed the 3-stage ``compression.interleaved_schedule_time``
+        recurrence, and encode/comm report only the overhang past the end
+        of backward (``t_backward`` seconds). ``bwd_chunks=1`` keeps the
+        PR 2 post-accumulation pipeline bit-for-bit. ``stages``: a cached
+        ``stage_times(net, ids)`` result to skip the schedule walk."""
+        st = stages if stages is not None else self.stage_times(net, ids)
+        t_enc, t_comm = list(st.t_enc), list(st.t_comm)
         comm_serial = sum(t_comm)
-        comm = (pipelined - encode) if (overlap and self.bc.spec.n > 1) \
-            else comm_serial
-        return PhaseCost(encode=encode, comm=comm, recover=sum(t_rec),
-                         comm_serial=comm_serial, bytes_wire=b_wire,
-                         bytes_critical=b_crit, rounds=n_rounds)
+        if bwd_chunks > 1 and overlap:
+            d = self.bc.spec.total
+            ready_ev = bucket_readiness(self.bc.spec.offsets,
+                                        self.bc.spec.sizes, d, bwd_chunks)
+            ev_t = event_times(t_backward, bwd_chunks)
+            ready = [ev_t[e] for e in ready_ev]
+            _, pipelined, _, done_enc = comp.interleaved_schedule_time(
+                t_enc, t_comm, ready, t_backward=t_backward)
+            encode = max(0.0, done_enc - t_backward)
+            comm = pipelined - max(t_backward, done_enc)
+        else:
+            serial, pipelined = comp.overlap_schedule_time(t_enc, t_comm)
+            encode = sum(t_enc)
+            comm = (pipelined - encode) if (overlap and self.bc.spec.n > 1) \
+                else comm_serial
+        return PhaseCost(encode=encode, comm=comm, recover=sum(st.t_rec),
+                         comm_serial=comm_serial, bytes_wire=st.bytes_wire,
+                         bytes_critical=st.bytes_critical, rounds=st.rounds)

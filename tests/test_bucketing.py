@@ -50,6 +50,58 @@ def test_bucket_sizes_deterministic():
     assert bucket_sizes(_shapes(), 4) == bucket_sizes(_shapes(), 4)
 
 
+def test_bucket_sizes_more_buckets_than_atoms():
+    # 4 atoms (top_s, top_r, one cycle row each of _s/_r), 16 requested:
+    # atoms are subdivided, the partition stays exact and positive
+    shapes = _shapes(top_s=1000, top_r=200, n_cyc=1, cyc_s=500, cyc_r=100)
+    sizes = bucket_sizes(shapes, 16)
+    assert sum(sizes) == 1800
+    assert 4 <= len(sizes) <= 16
+    assert all(s > 0 for s in sizes)
+
+
+def test_bucket_sizes_single_oversized_segment_deterministic():
+    # one giant atom, everything else empty: even subdivision, repeatable
+    shapes = {"top_s": (100_003,), "top_r": (0,),
+              "cycles_s": (0, 0), "cycles_r": (0, 0)}
+    a = bucket_sizes(shapes, 5)
+    b = bucket_sizes(shapes, 5)
+    assert a == b
+    assert sum(a) == 100_003 and len(a) == 5
+    assert max(a) - min(a) <= 2    # near-even split of the single atom
+
+
+def test_bucket_sizes_n_equals_d_degenerate():
+    shapes = {"top_s": (7,), "top_r": (0,),
+              "cycles_s": (0, 0), "cycles_r": (0, 0)}
+    sizes = bucket_sizes(shapes, 7)
+    assert sizes == (1,) * 7
+    # requests beyond d clamp to d
+    assert sum(bucket_sizes(shapes, 1000)) == 7
+
+
+def test_bucketize_degenerate_geometry_guard():
+    """Tiny buckets: k_b clamps to >= 1 and the width snaps to the
+    power-of-two FLOOR of the share, never below the 256 row minimum."""
+    base = comp.make("gs-sgd", k=10, rows=3, width=4096)
+    bc = comp.bucketize(base, (99_999, 1))
+    tiny = bc.parts[1]
+    assert tiny.k == 1                       # round(10 * 1e-5) would be 0
+    assert tiny.sketch.width == 256          # row minimum, power of two
+    # a 30% bucket floors to 1024, not SketchConfig's round-UP 2048
+    bc = comp.bucketize(base, (7000, 3000))
+    assert bc.parts[1].sketch.width == 1024
+    assert bc.parts[0].sketch.width == 2048
+    for c in bc.parts:
+        w = c.sketch.width
+        assert w & (w - 1) == 0 and 256 <= w <= base.sketch.width
+    # degenerate single-coordinate exchange still runs end-to-end
+    bc = comp.bucketize(base, (4095, 1))
+    g = jax.random.normal(jax.random.PRNGKey(0), (P, 4096))
+    upd, _, _ = _vmap_exchange(bc, g, overlap=True)
+    assert np.isfinite(np.asarray(upd)).all()
+
+
 # ---------------------------------------------------------------------------
 # Train-step equivalence (acceptance criterion)
 # ---------------------------------------------------------------------------
