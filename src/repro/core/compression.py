@@ -86,11 +86,14 @@ class DenseAllReduce:
     def init(self, d: int) -> Any:
         return ()
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        return CommStats(_ring_allreduce_bytes(d * _F32, nworkers),
+                         rounds=2 * (nworkers - 1), label=self.name)
+
     def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         upd = jax.lax.psum(g.astype(jnp.float32), axis)
-        stats = CommStats(_ring_allreduce_bytes(g.size * _F32, nworkers),
-                          rounds=2 * (nworkers - 1), label=self.name)
+        stats = self.comm_stats(g.size, nworkers)
         return upd, state, stats
 
 
@@ -110,6 +113,10 @@ class TopKCompressor:
     def init(self, d: int) -> Array:
         return ef.init(d)
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        return CommStats(2 * self.k * (_F32 + _I32), rounds=2,
+                         label=self.name)
+
     def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         u = ef.add(acc, g)
@@ -118,8 +125,7 @@ class TopKCompressor:
         local = _scatter(d, idx, u[idx])
         upd = jax.lax.psum(local, axis)
         acc = ef.residual_dense(u, local)
-        stats = CommStats(2 * self.k * (_F32 + _I32), rounds=2, label=self.name)
-        return upd, acc, stats
+        return upd, acc, self.comm_stats(d, nworkers)
 
 
 @jax.tree_util.register_static
@@ -144,6 +150,11 @@ class GTopK:
         _, idx = jax.lax.top_k(jnp.abs(x), self.k)
         return _scatter(x.shape[0], idx, x[idx])
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        rounds = ar.tree_allreduce_rounds(nworkers)
+        return CommStats(rounds * self.k * (_F32 + _I32), rounds=rounds,
+                         label=self.name)
+
     def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         if not isinstance(axis, str):
@@ -164,10 +175,7 @@ class GTopK:
         # EF: zero the globally surviving coordinates in u.
         _, idx = jax.lax.top_k(jnp.abs(s), self.k)
         acc = ef.residual_global(u, idx)
-        rounds = ar.tree_allreduce_rounds(nworkers)
-        stats = CommStats(rounds * self.k * (_F32 + _I32), rounds=rounds,
-                          label=self.name)
-        return s, acc, stats
+        return s, acc, self.comm_stats(u.shape[0], nworkers)
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +243,11 @@ class SketchedSGD(_SketchBased):
 
     name: str = "sketched-sgd"
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        sk_bytes = self.sketch.size * _F32
+        return CommStats(sk_bytes * nworkers + self.k * _F32,
+                         rounds=nworkers, label=self.name)
+
     def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         u = ef.add(acc, g)
@@ -244,10 +257,7 @@ class SketchedSGD(_SketchBased):
         sk_sum = jnp.sum(gathered.reshape(-1, *sk.shape), axis=0)
         upd, idx = self._recover(sk_sum, u, d, axis=axis, key=key)
         acc = ef.residual_global(u, idx)
-        sk_bytes = self.sketch.size * _F32
-        stats = CommStats(sk_bytes * nworkers + self.k * _F32,
-                          rounds=nworkers, label=self.name)
-        return upd, acc, stats
+        return upd, acc, self.comm_stats(d, nworkers)
 
 
 @jax.tree_util.register_static
@@ -359,6 +369,11 @@ class FetchSGDStyle(_SketchBased):
         z = jnp.zeros((self.sketch.rows, self.sketch.width), jnp.float32)
         return (z, z)  # (momentum sketch, error sketch)
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        return CommStats(
+            _ring_allreduce_bytes(self.sketch.size * _F32, nworkers),
+            rounds=2 * (nworkers - 1), label=self.name)
+
     def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         s_m, s_e = state
@@ -369,10 +384,7 @@ class FetchSGDStyle(_SketchBased):
         idx, est = hm.heavymix(self.sketch, s_e, self.k, d, key=key)
         upd = _scatter(d, idx, est)
         s_e = s_e - self._encode(upd)                  # subtract applied
-        stats = CommStats(
-            _ring_allreduce_bytes(self.sketch.size * _F32, nworkers),
-            rounds=2 * (nworkers - 1), label=self.name)
-        return upd, (s_m, s_e), stats
+        return upd, (s_m, s_e), self.comm_stats(d, nworkers)
 
 
 @jax.tree_util.register_static
@@ -390,6 +402,11 @@ class SignSGD:
     def init(self, d: int) -> Array:
         return ef.init(d)
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        return CommStats(
+            _ring_allreduce_bytes(d / 8 + _F32, nworkers),
+            rounds=2 * (nworkers - 1), label=self.name)
+
     def step(self, acc: Array, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         u = ef.add(acc, g)
@@ -397,10 +414,7 @@ class SignSGD:
         local = jnp.sign(u) * scale
         upd = jax.lax.psum(local, axis)
         acc = ef.residual_dense(u, local)
-        stats = CommStats(
-            _ring_allreduce_bytes(g.size / 8 + _F32, nworkers),
-            rounds=2 * (nworkers - 1), label=self.name)
-        return upd, acc, stats
+        return upd, acc, self.comm_stats(g.size, nworkers)
 
 
 @jax.tree_util.register_static
@@ -426,6 +440,14 @@ class PowerSGD:
                               jnp.float32)
         return (ef.init(d), q)
 
+    def comm_stats(self, d: int, nworkers: int) -> CommStats:
+        m0 = 1 << ((d - 1).bit_length() + 1) // 2      # init's split
+        n = (d + m0 - 1) // m0
+        m = (d + n - 1) // n                           # step's matricization
+        return CommStats(
+            _ring_allreduce_bytes(self.rank * (m + n) * _F32, nworkers),
+            rounds=4 * (nworkers - 1), label=self.name)
+
     def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None):
         acc, q = state
@@ -442,10 +464,7 @@ class PowerSGD:
         # (these sum to ``approx`` — same bookkeeping exactness as gs-SGD)
         local = (p @ (mat.T @ p).T).reshape(-1)[:d]
         acc = ef.residual_dense(u, local)
-        stats = CommStats(
-            _ring_allreduce_bytes(self.rank * (m + n) * _F32, nworkers),
-            rounds=4 * (nworkers - 1), label=self.name)
-        return approx, (acc, q_new), stats
+        return approx, (acc, q_new), self.comm_stats(d, nworkers)
 
 
 # ---------------------------------------------------------------------------
@@ -643,6 +662,13 @@ class BucketedCompressor:
         assert d == self.spec.total, (d, self.spec.total)
         return tuple(c.init(s) for c, s in zip(self.parts, self.spec.sizes))
 
+    def comm_stats(self, d: int, nworkers: int) -> BucketedCommStats:
+        assert d == self.spec.total, (d, self.spec.total)
+        return BucketedCommStats(
+            tuple(c.comm_stats(s, nworkers)
+                  for c, s in zip(self.parts, self.spec.sizes)),
+            label=self.name)
+
     def step(self, state, g: Array, *, axis: AxisNames, nworkers: int,
              key: Array | None = None, **kw):
         if kw:  # e.g. include=: drop kwargs the base doesn't support, so a
@@ -685,6 +711,20 @@ def bucketize(base, sizes) -> BucketedCompressor:
                               name=f"bucketed[{spec.n}]({base.name})")
 
 
+def static_comm_stats(compressor, d: int, nworkers: int):
+    """Wire model of one aggregation step WITHOUT running it.
+
+    Every compressor's ``comm_stats(d, nworkers)`` returns the identical
+    ``CommStats`` its ``step`` would (the step methods call the accessor —
+    single source of the wire model), so launch/benchmark tooling can dump
+    per-step comm volumes with zero probe traffic. ``compressor=None`` is
+    the dense-psum baseline path of ``make_train_step``.
+    """
+    if compressor is None:
+        return DenseAllReduce().comm_stats(d, nworkers)
+    return compressor.comm_stats(d, nworkers)
+
+
 REGISTRY = {
     "dense": DenseAllReduce,
     "topk": TopKCompressor,
@@ -698,13 +738,21 @@ REGISTRY = {
 
 
 def make(name: str, **kw) -> Any:
-    """Build a compressor by name; sketch geometry via rows/width/seed kw."""
+    """Build a compressor by name; sketch geometry via rows/width/seed kw.
+
+    Non-sketch compressors silently drop the sketch-geometry kwargs (and
+    the k-free baselines drop ``k``), so one launcher/tuner kwarg dict can
+    be threaded to any method."""
     cls = REGISTRY[name]
     if name in ("sketched-sgd", "gs-sgd", "fetchsgd"):
         sk = cs.SketchConfig(rows=kw.pop("rows", 5),
                              width=kw.pop("width", 16384),
                              seed=kw.pop("seed", 0))
         return cls(sketch=sk, **kw)
+    fields = {f.name for f in dataclasses.fields(cls)}
+    for geo in ("rows", "width", "seed"):
+        if geo not in fields:
+            kw.pop(geo, None)
     if name in ("dense", "signsgd", "powersgd"):
         kw.pop("k", None)
     return cls(**kw)

@@ -114,6 +114,20 @@ def local_seg_shapes(fs: FlatSpec, ma: MeshAxes,
     return out
 
 
+def validate_exchange_config(*, microbatch: int | None = None,
+                             bwd_chunks: int | None = None) -> None:
+    """Reject exchange configs the runtime cannot build.
+
+    The single source of the step-config constraints: ``make_train_step``
+    raises through this at build time, and ``repro.tune``'s searcher calls
+    the same function to SKIP the candidate instead of crashing mid-sweep.
+    """
+    if bwd_chunks is not None and microbatch is not None:
+        raise ValueError("bwd_chunks interleaves the exchange with ONE "
+                         "backward pass; combining it with microbatch "
+                         "accumulation is not supported")
+
+
 # ---------------------------------------------------------------------------
 # Bucket scheduler (comm/compute overlap; see DESIGN.md §5)
 # ---------------------------------------------------------------------------
@@ -350,10 +364,7 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     gathers = _gather_closures(ma, dp_mode, dtype)
     shapes = local_seg_shapes(fs, ma, dp_mode)
     d_local = sum(_math.prod(s) for s in shapes.values())
-    if bwd_chunks is not None and microbatch is not None:
-        raise ValueError("bwd_chunks interleaves the exchange with ONE "
-                         "backward pass; combining it with microbatch "
-                         "accumulation is not supported")
+    validate_exchange_config(microbatch=microbatch, bwd_chunks=bwd_chunks)
 
     # In 'dp' the compressor sums raw per-worker grads over all dp axes; in
     # 'fsdp' backward's psum_scatter has already summed over 'data', so only

@@ -94,9 +94,18 @@ def curves_json(res) -> dict:
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(
         description="discrete-event gs-SGD cluster simulator")
-    ap.add_argument("--p", type=int, default=64, help="initial worker count")
-    ap.add_argument("--d", type=int, default=15_000_000,
-                    help="flat gradient dimension (default: VGG-16 scale)")
+    ap.add_argument("--plan", default=None, metavar="PLAN.json",
+                    help="apply a repro.launch.tune plan: tuned exchange "
+                         "config (method/buckets/bwd-chunks/k/rows/width/"
+                         "shape) plus the plan env's topology/link regime; "
+                         "--p/--d default to the plan's env, and the "
+                         "remaining CLI flags (steps, faults, compute "
+                         "jitter, ...) still apply")
+    ap.add_argument("--p", type=int, default=None,
+                    help="initial worker count (default 64, or the plan's)")
+    ap.add_argument("--d", type=int, default=None,
+                    help="flat gradient dimension (default: VGG-16 scale, "
+                         "or the plan's)")
     ap.add_argument("--method", default="gs-sgd",
                     choices=["gs-sgd", "gtopk", "sketched-sgd", "dense"])
     ap.add_argument("--buckets", type=int, default=1)
@@ -120,8 +129,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--bwd-frac", type=float, default=2 / 3,
                     help="backward share of per-step compute (readiness "
                          "clock for --bwd-chunks > 1)")
-    ap.add_argument("--compute-mean", type=float, default=0.1,
-                    help="mean seconds of fwd+bwd per step")
+    ap.add_argument("--compute-mean", type=float, default=None,
+                    help="mean seconds of fwd+bwd per step (default 0.1, "
+                         "or the plan env's possibly-calibrated t_compute)")
     ap.add_argument("--compute-jitter", type=float, default=0.08)
     ap.add_argument("--heartbeat-timeout", type=float, default=1.0)
     ap.add_argument("--no-drop-stragglers", action="store_true")
@@ -139,35 +149,61 @@ def main(argv=None) -> dict:
                          "checks) for CI diffing")
     args = ap.parse_args(argv)
 
+    plan = None
+    if args.plan:
+        from repro.tune import TunePlan
+        plan = TunePlan.load(args.plan)
+    p = args.p if args.p is not None else (plan.env.p if plan else 64)
+    d = args.d if args.d is not None else (plan.env.d if plan
+                                           else 15_000_000)
+    compute_mean = args.compute_mean if args.compute_mean is not None else \
+        (plan.env.t_compute if plan else 0.1)
+
     trace = FaultTrace()
     if args.fault_trace:
         trace = FaultTrace.load(args.fault_trace)
     elif args.synthetic_faults is not None:
         kv = _parse_kv(args.synthetic_faults)
         rejoin = kv.pop("rejoin_after", None)
-        trace = synthetic(args.p, args.steps, seed=args.seed,
+        trace = synthetic(p, args.steps, seed=args.seed,
                           rejoin_after=int(rejoin) if rejoin else None,
                           **{k: float(v) for k, v in kv.items()})
 
     rows: int | str = args.rows if args.rows == "log" else int(args.rows)
-    cfg = SimConfig(
-        p=args.p, d=args.d, method=args.method, buckets=args.buckets,
-        steps=args.steps, k=args.k, rows=rows, width=args.width,
+    kw = dict(
+        d=d, method=args.method, buckets=args.buckets,
+        k=args.k, rows=rows, width=args.width,
         shape=args.shape, topology=args.topology, link=args.link,
-        group_size=args.group_size, overlap=not args.no_overlap,
-        bwd_chunks=args.bwd_chunks, bwd_frac=args.bwd_frac,
-        compute=ComputeModel(mean=args.compute_mean,
+        group_size=args.group_size,
+        bwd_chunks=args.bwd_chunks, bwd_frac=args.bwd_frac)
+    net = None
+    if plan is not None:
+        kw.update(plan.sim_kw())
+        kw["d"] = d  # an explicit --d still wins over the plan env's
+        # the env's network carries any CALIBRATED alpha/beta (the preset
+        # name in SimConfig.link alone would silently lose them)
+        net = plan.env.network()
+        spec = plan.env.link_spec()
+        cal = (f" [calibrated a={spec.alpha:.2e} b={spec.beta:.2e}]"
+               if plan.env.link_alpha is not None
+               or plan.env.link_beta is not None else "")
+        print(f"plan {args.plan}: {plan.choice.label()} on "
+              f"{kw['topology']}/{kw['link']}{cal} (predicted step "
+              f"{plan.predicted['step_time'] * 1e3:.2f}ms)")
+    cfg = SimConfig(
+        p=p, steps=args.steps, overlap=not args.no_overlap,
+        compute=ComputeModel(mean=compute_mean,
                              jitter=args.compute_jitter, seed=args.seed),
         heartbeat_timeout=args.heartbeat_timeout,
         drop_stragglers=not args.no_drop_stragglers,
-        deadline_factor=args.deadline_factor, seed=args.seed)
+        deadline_factor=args.deadline_factor, seed=args.seed, **kw)
 
     t0 = time.time()
-    res = simulate(cfg, trace)
+    res = simulate(cfg, trace, net=net)
     wall = time.time() - t0
     tot = res.totals()
-    print(f"simulated P={args.p} d={args.d:.2e} {args.method} "
-          f"buckets={args.buckets} for {tot['steps']} steps "
+    print(f"simulated P={p} d={cfg.d:.2e} {cfg.method} "
+          f"buckets={cfg.buckets} for {tot['steps']} steps "
           f"({res.events_run} events) in {wall:.2f}s wall, "
           f"{tot['makespan']:.1f}s simulated\n")
     _timeline(res)

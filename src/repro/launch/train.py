@@ -96,6 +96,15 @@ def main(argv=None) -> dict:
                          "and start each bucket's exchange as its gradient "
                          "is emitted (None = monolithic backward; 1 = "
                          "readiness path, bit-exact vs monolithic)")
+    ap.add_argument("--auto-tune", default=None, metavar="PLAN.json",
+                    help="resolve compressor/buckets/bwd-chunks/k/rows/"
+                         "width from a repro.launch.tune plan (applied "
+                         "through the same flags — bit-exact vs passing "
+                         "them manually)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a repro.tune/trace@1 calibration trace: "
+                         "per-step wall time + CommStats (rounds/bytes), "
+                         "consumable by repro.launch.tune --calibrate")
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -105,6 +114,13 @@ def main(argv=None) -> dict:
                     help="simulate a crash after this step (tests)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.auto_tune:
+        from repro.tune import TunePlan
+        plan = TunePlan.load(args.auto_tune)
+        for field, val in plan.train_args().items():
+            setattr(args, field, val)
+        print(f"auto-tune {args.auto_tune}: " + " ".join(plan.train_argv()))
 
     cfg, opt, ma, ts = build(args)
     P = args.workers
@@ -131,6 +147,32 @@ def main(argv=None) -> dict:
             print(f"resumed from step {start}")
 
     history = []
+    records = []
+    stats = None
+    if args.json:
+        from repro.core import compression as comp
+        stats = comp.static_comm_stats(ts.compressor, ts.d_local, P)
+
+    def dump_trace() -> None:
+        """repro.tune/trace@1 — per-step wall time + static CommStats, the
+        calibration capture path (repro.launch.tune --calibrate)."""
+        if not args.json:
+            return
+        doc = {"schema": "repro.tune/trace@1",
+               "model": {"arch": cfg.name, "p": P, "d": ts.d_local,
+                         "compressor": args.compressor,
+                         "buckets": args.buckets,
+                         "bwd_chunks": args.bwd_chunks,
+                         "overlap": not args.no_overlap,
+                         "k": args.k, "rows": args.rows,
+                         "width": args.width, "seed": args.seed,
+                         "bytes_per_step": stats.bytes_out,
+                         "rounds_per_step": stats.rounds},
+               "records": records}
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.json} ({len(records)} records)")
+
     t0 = time.time()
     for step in range(start, args.steps):
         gb = stream.global_batch_at(step)
@@ -139,9 +181,14 @@ def main(argv=None) -> dict:
                 lambda a: a.reshape((P, args.batch // P) + a.shape[1:]), gb)
         else:
             batch = gb
+        t_step0 = time.time()
         state, m = step_fn(state, batch)
         loss = float(m["loss"][0] if P > 1 else m["loss"])
         history.append(loss)
+        if args.json:
+            records.append({"step": step, "t_step": time.time() - t_step0,
+                            "loss": loss, "rounds": stats.rounds,
+                            "bytes": stats.bytes_out})
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d}  loss {loss:.4f}  "
                   f"({(time.time() - t0):.1f}s)")
@@ -151,10 +198,12 @@ def main(argv=None) -> dict:
             print(f"simulated crash at step {step + 1}")
             if saver:
                 saver.wait()
+            dump_trace()
             return {"history": history, "crashed_at": step + 1}
     if saver:
         saver.save(args.steps, state, {"loss": history[-1]})
         saver.wait()
+    dump_trace()
     out = {"history": history, "final_loss": history[-1]}
     print(json.dumps({"final_loss": history[-1],
                       "steps": len(history)}))

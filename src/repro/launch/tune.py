@@ -1,0 +1,182 @@
+"""Auto-tuner driver: search the exchange-config space, emit a TunePlan.
+
+Searches (buckets, bwd_chunks, rows, width, top-k fraction, collective)
+by replaying every candidate through the REAL ``repro.sim`` pricing on the
+target environment, optionally anchored to hardware with ``--calibrate``
+(a measured step-time trace from ``train --json`` or ``simulate --json``).
+The winning plan is a JSON document the other launchers apply directly:
+
+    repro.launch.train    --auto-tune PLAN.json
+    repro.launch.simulate --plan PLAN.json
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.tune --p 64 --d 15000000 \
+      --topology hier --buckets 1 4 8 --bwd-chunks 1 2 4 --out plan.json
+  PYTHONPATH=src python -m repro.launch.tune --arch qwen3-4b --smoke \
+      --p 4 --calibrate experiments/trace.json --out plan.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+from repro.tune import Env, SearchSpace, TunePlan, fit, load_trace, search
+
+
+def _arch_d(arch: str, smoke: bool, p: int) -> int:
+    """Flat gradient dimension of an arch exactly as train would see it."""
+    from repro.configs import ARCHS, SMOKES
+    from repro.core.gs_sgd import MeshAxes, local_seg_shapes
+    from repro.models.flatten import make_flat_spec
+    cfg = (SMOKES if smoke else ARCHS)[arch]
+    ma = MeshAxes(tp=1, data=p, tp_axis=None,
+                  data_axis="data" if p > 1 else None)
+    shapes = local_seg_shapes(make_flat_spec(cfg, 1), ma, "dp")
+    return sum(math.prod(s) for s in shapes.values())
+
+
+def _rows(vals) -> tuple:
+    return tuple(v if v == "log" else int(v) for v in vals)
+
+
+def _opt_int(vals) -> tuple:
+    return tuple(None if v in ("none", "None") else int(v) for v in vals)
+
+
+def _opt_float(vals) -> tuple:
+    return tuple(None if v in ("none", "None") else float(v) for v in vals)
+
+
+def _opt_str(vals) -> tuple:
+    return tuple(None if v in ("none", "None") else v for v in vals)
+
+
+def main(argv=None) -> TunePlan:
+    ap = argparse.ArgumentParser(
+        description="sim-driven auto-tuner for the gs-SGD exchange pipeline")
+    # environment
+    ap.add_argument("--p", type=int, default=64, help="worker count")
+    ap.add_argument("--d", type=int, default=None,
+                    help="flat gradient dimension (or use --arch)")
+    ap.add_argument("--arch", default=None,
+                    help="derive d from this arch's flat spec")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --arch: the reduced same-family config")
+    ap.add_argument("--topology", default="flat", choices=["flat", "hier"])
+    ap.add_argument("--link", default="1gbe",
+                    choices=["1gbe", "10gbe", "ici"])
+    ap.add_argument("--intra-link", default="ici",
+                    choices=["1gbe", "10gbe", "ici"])
+    ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--compute-mean", type=float, default=0.1,
+                    help="seconds of fwd+bwd per step (overridden by "
+                         "--calibrate)")
+    ap.add_argument("--bwd-frac", type=float, default=2 / 3)
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="planned runtime accumulation (constrains the "
+                         "space: bwd_chunks>1 candidates are skipped)")
+    # search space
+    ap.add_argument("--methods", nargs="+", default=["gs-sgd"])
+    ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--bwd-chunks", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--rows", nargs="+", default=["5"],
+                    help="sketch depths: ints and/or 'log'")
+    ap.add_argument("--widths", nargs="+", default=["none"],
+                    help="sketch widths: ints and/or 'none' (default "
+                         "geometry)")
+    ap.add_argument("--k-fracs", nargs="+", default=["none"],
+                    help="top-k fractions of d and/or 'none' (0.4%% "
+                         "default)")
+    ap.add_argument("--shapes", nargs="+", default=["none"],
+                    help="collective shapes: tree/ring/hier/ps and/or "
+                         "'none' (per-method default)")
+    # search controls
+    ap.add_argument("--top", type=int, default=5,
+                    help="alternatives kept in the plan")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max candidates to evaluate (seeded subsample)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-error-probe", action="store_true",
+                    help="skip the count-sketch fidelity probe (rank on "
+                         "time only)")
+    ap.add_argument("--max-error", type=float, default=None,
+                    help="drop candidates whose error proxy exceeds this")
+    ap.add_argument("--probe-d", type=int, default=1 << 14)
+    # calibration + output
+    ap.add_argument("--calibrate", default=None, nargs="+",
+                    metavar="TRACE.json",
+                    help="fit alpha/beta/compute from measured trace(s) "
+                         "(train --json / simulate --json) before tuning; "
+                         "pass several runs captured at different "
+                         "buckets/widths to make alpha/beta identifiable")
+    ap.add_argument("--out", default=None, metavar="PLAN.json")
+    args = ap.parse_args(argv)
+
+    if args.d is None:
+        if args.arch is None:
+            ap.error("one of --d or --arch is required")
+        args.d = _arch_d(args.arch, args.smoke, args.p)
+        print(f"arch {args.arch}{' (smoke)' if args.smoke else ''}: "
+              f"d = {args.d}")
+
+    env = Env(p=args.p, d=args.d, topology=args.topology, link=args.link,
+              intra_link=args.intra_link, group_size=args.group_size,
+              t_compute=args.compute_mean, bwd_frac=args.bwd_frac,
+              microbatch=args.microbatch)
+    if args.calibrate:
+        cal = fit([load_trace(p) for p in args.calibrate])
+        env = cal.apply(env)
+        print(f"calibrated from {', '.join(args.calibrate)}: "
+              f"alpha={cal.alpha:.3e}s "
+              f"beta={cal.beta:.3e}s/B t_compute={cal.t_compute:.4f}s "
+              f"(rms residual {cal.residual:.2e}s over {cal.n_records} "
+              f"records)")
+
+    space = SearchSpace(methods=tuple(args.methods),
+                        buckets=tuple(args.buckets),
+                        bwd_chunks=tuple(args.bwd_chunks),
+                        rows=_rows(args.rows), widths=_opt_int(args.widths),
+                        k_fracs=_opt_float(args.k_fracs),
+                        shapes=_opt_str(args.shapes))
+    t0 = time.time()
+    plan = search(space, env, top=args.top, budget=args.budget,
+                  seed=args.seed, error_probe=not args.no_error_probe,
+                  probe_d=args.probe_d, max_error=args.max_error)
+    wall = time.time() - t0
+
+    pv = plan.provenance
+    print(f"searched {pv['n_evaluated']}/{pv['space_size']} candidates "
+          f"({len(plan.skipped)} skipped) in {wall:.1f}s for P={env.p} "
+          f"d={env.d:.2e} {env.topology}/{env.link}\n")
+    print(f"{'rank':>4s}  {'candidate':<28s} {'step ms':>9s} "
+          f"{'exposed ms':>10s} {'err':>6s} {'compress':>8s}")
+    rows = [(plan.choice, plan.predicted)] + [
+        (type(plan.choice)(**a["candidate"]), a["cost"])
+        for a in plan.alternatives]
+    for i, (cand, cc) in enumerate(rows):
+        print(f"{i:4d}  {cand.label():<28s} {cc['step_time'] * 1e3:9.2f} "
+              f"{cc['exposed_comm'] * 1e3:10.2f} {cc['error_proxy']:6.3f} "
+              f"x{cc['compression']:7.0f}")
+    if plan.skipped:
+        reasons = {}
+        for s in plan.skipped:
+            key = s["reason"].split(";")[0][:60]
+            reasons[key] = reasons.get(key, 0) + 1
+        print("\nskipped:")
+        for r, n in sorted(reasons.items()):
+            print(f"  {n:3d} x {r}")
+    print(f"\nplan: {plan.summary()}")
+    try:
+        print("train flags: " + " ".join(plan.train_argv()))
+    except ValueError as e:  # sim-only plan (tuned collective shape)
+        print(f"train flags: n/a — {e}")
+    if args.out:
+        plan.save(args.out)
+        print(f"wrote {args.out}")
+    return plan
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,8 @@ from repro.sim.network import (LINK_1GBE, LINK_10GBE, LINK_ICI, Heterogeneous,
                                hierarchical_allreduce_cost, make_network,
                                pairwise_rounds, ps_gather_cost,
                                ring_allreduce_cost, tree_allreduce_cost)
-from repro.sim.replay import ExchangeReplay, PhaseCost, default_geometry
+from repro.sim.replay import (ExchangeReplay, PhaseCost, default_geometry,
+                              predict_step)
 from repro.sim.traces import FaultTrace, TraceEvent, synthetic
 from repro.sim.workers import ComputeModel
 
@@ -33,5 +34,5 @@ __all__ = [
     "make_network", "pairwise_rounds", "tree_allreduce_cost",
     "ring_allreduce_cost", "ps_gather_cost", "hierarchical_allreduce_cost",
     "allreduce_cost", "ExchangeReplay", "PhaseCost", "default_geometry",
-    "FaultTrace", "TraceEvent", "synthetic", "ComputeModel",
+    "predict_step", "FaultTrace", "TraceEvent", "synthetic", "ComputeModel",
 ]

@@ -296,3 +296,53 @@ class ExchangeReplay:
         return PhaseCost(encode=encode, comm=comm, recover=sum(st.t_rec),
                          comm_serial=comm_serial, bytes_wire=st.bytes_wire,
                          bytes_critical=st.bytes_critical, rounds=st.rounds)
+
+
+def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
+                 bwd_chunks: int = 1, k: int | None = None,
+                 rows: int | str = "log", width: int | None = None,
+                 shape: str | None = None, topology: str = "flat",
+                 link: str = "1gbe", intra_link: str = "ici",
+                 group_size: int = 8, overlap: bool = True,
+                 t_compute: float = 0.1, bwd_frac: float = 2 / 3,
+                 net: netm.NetworkModel | None = None,
+                 replay: "ExchangeReplay | None" = None) -> dict:
+    """One-call candidate pricing — the auto-tuner's replay entry point.
+
+    Builds the real ``ExchangeReplay`` (real compressor geometry, real
+    collective schedules on the modeled topology) for a full-membership
+    cluster of ``p`` workers and prices one steady-state step: this is
+    exactly what ``sim/cluster.simulate`` charges per step with zero
+    compute jitter and no faults (barrier == ``t_compute``), so a
+    ``repro.tune`` prediction and a full event-loop run agree on the
+    configs the tuner ranks. ``net``/``replay`` accept prebuilt objects so
+    a sweep over many candidates reuses the network (and a sweep over
+    backward depths reuses the schedule walk).
+
+    Returns a plain dict: ``step_time`` (compute + exposed exchange),
+    ``exposed_comm`` (encode + comm overhang the schedule could not hide),
+    the per-phase splits, byte/round totals, and the RESOLVED geometry
+    (post ``default_geometry`` defaults and ``bucketize`` scaling) for
+    plan provenance.
+    """
+    net = net or netm.make_network(topology, link=link,
+                                   group_size=group_size, intra=intra_link)
+    rep = replay if replay is not None else ExchangeReplay(
+        method, d, buckets=buckets, k=k, rows=rows, width=width,
+        shape=shape, group_size=group_size)
+    ids = list(range(p))
+    interleave = bwd_chunks > 1 and overlap
+    t_bwd = t_compute * bwd_frac if interleave else 0.0
+    pc = rep.step_cost(net, ids, overlap=overlap, t_backward=t_bwd,
+                       bwd_chunks=bwd_chunks)
+    return {
+        "step_time": t_compute + pc.total,
+        "exposed_comm": pc.encode + pc.comm,
+        "encode": pc.encode, "comm": pc.comm, "recover": pc.recover,
+        "comm_serial": pc.comm_serial,
+        "bytes_critical": pc.bytes_critical, "bytes_wire": pc.bytes_wire,
+        "rounds": pc.rounds,
+        "geometry": {"k": rep.k, "rows": rep.rows, "width": rep.width,
+                     "buckets": rep.bc.spec.n, "shape": rep.shape,
+                     "bucket_sizes": list(rep.bc.spec.sizes)},
+    }

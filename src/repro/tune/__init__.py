@@ -1,0 +1,30 @@
+"""repro.tune — sim-driven auto-tuner for the gs-SGD exchange pipeline.
+
+Turns ``repro.sim`` from a reporting tool into the decision engine: search
+the joint (buckets, bwd_chunks, rows, width, top-k fraction, collective)
+space by replaying candidates through the REAL simulator pricing, anchor
+the cost model to hardware with trace calibration, and emit a serializable
+``TunePlan`` the launchers apply through their existing flag paths.
+
+    space.py      — Env / Candidate / SearchSpace + runtime-reused validation
+    cost.py       — CostModel: real-replay step time + heavymix error probe
+    search.py     — deterministic grid/budgeted search -> TunePlan
+    calibrate.py  — fit Eq. 1 alpha/beta + compute from measured traces
+    plan.py       — TunePlan (JSON): save/load + train/simulate application
+
+CLI: ``python -m repro.launch.tune`` (see DESIGN.md §8).
+"""
+
+from repro.tune.calibrate import (TRACE_SCHEMA, Calibration, fit, load_trace,
+                                  synthetic_trace)
+from repro.tune.cost import CandidateCost, CostModel, probe_gradient
+from repro.tune.plan import TunePlan
+from repro.tune.search import search
+from repro.tune.space import (Candidate, Env, SearchSpace, enumerate_valid,
+                              validate)
+
+__all__ = [
+    "Calibration", "Candidate", "CandidateCost", "CostModel", "Env",
+    "SearchSpace", "TRACE_SCHEMA", "TunePlan", "enumerate_valid", "fit",
+    "load_trace", "probe_gradient", "search", "synthetic_trace", "validate",
+]

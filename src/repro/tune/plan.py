@@ -1,0 +1,167 @@
+"""``TunePlan`` — the serializable decision the tuner hands the launchers.
+
+A plan is a JSON document: the env it was tuned for, the chosen candidate
+with its RESOLVED geometry (k/rows/width as plain ints, after
+``default_geometry`` defaults — so applying a plan never re-derives
+anything), the predicted economics, the ranked runners-up, what the
+searcher skipped and why, and provenance (space + seed) sufficient to
+reproduce the search bit-for-bit.
+
+Application goes through the launchers' existing paths only:
+
+* ``train_args()``/``train_argv()`` map the choice onto the exact
+  ``repro.launch.train`` flags — ``--auto-tune PLAN.json`` is therefore
+  pinned bit-exact against the same flags passed manually (the plan never
+  touches ``make_train_step`` except through the CLI's own argument
+  plumbing).
+* ``sim_kw()`` maps choice + env onto ``SimConfig`` fields for
+  ``repro.launch.simulate --plan``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.tune.space import Candidate, Env, SearchSpace
+
+VERSION = 1
+SCHEMA = "repro.tune/plan@1"
+
+
+@dataclasses.dataclass(frozen=True)
+class TunePlan:
+    env: Env
+    choice: Candidate
+    geometry: dict                 # resolved ints: k, rows, width (+ buckets)
+    predicted: dict                # CandidateCost.to_json() of the choice
+    alternatives: list             # ranked top-N [{candidate, cost}]
+    skipped: list                  # [{candidate, reason}] from enumeration
+    provenance: dict               # {seed, space, n_valid, n_evaluated, ...}
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "schema": SCHEMA, "version": VERSION,
+            "env": self.env.to_json(), "choice": self.choice.to_json(),
+            "geometry": dict(self.geometry), "predicted": dict(self.predicted),
+            "alternatives": list(self.alternatives),
+            "skipped": list(self.skipped),
+            "provenance": dict(self.provenance),
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TunePlan":
+        if d.get("schema") != SCHEMA:
+            raise ValueError(f"not a {SCHEMA} document: "
+                             f"schema={d.get('schema')!r}")
+        return cls(env=Env.from_json(d["env"]),
+                   choice=Candidate.from_json(d["choice"]),
+                   geometry=d["geometry"], predicted=d["predicted"],
+                   alternatives=d["alternatives"], skipped=d["skipped"],
+                   provenance=d["provenance"])
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "TunePlan":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- application --------------------------------------------------------
+
+    def train_args(self) -> dict:
+        """The ``repro.launch.train`` argument values this plan resolves to.
+
+        ``bwd_chunks=1`` maps to ``None`` (monolithic backward): the
+        readiness path at one chunk is pinned bit-exact against it, and
+        ``None`` keeps plans applicable to microbatched runs.
+
+        A tuned collective ``shape`` is a simulator-level knob with no
+        training-CLI equivalent — applying such a plan to training would
+        silently run economics the plan does not predict, so it is
+        refused loudly instead (re-tune with ``shapes=(None,)`` for a
+        trainable plan; ``simulate --plan`` applies the shape fine).
+        """
+        if self.choice.shape is not None:
+            raise ValueError(
+                f"plan tunes the collective shape ({self.choice.shape!r}),"
+                " which repro.launch.train cannot apply — re-tune with "
+                "shapes=(None,) for a trainable plan, or use "
+                "simulate --plan")
+        return {
+            "compressor": self.choice.method,
+            "buckets": int(self.choice.buckets),
+            "bwd_chunks": (int(self.choice.bwd_chunks)
+                           if self.choice.bwd_chunks > 1 else None),
+            "k": int(self.geometry["k"]),
+            "rows": int(self.geometry["rows"]),
+            "width": int(self.geometry["width"]),
+        }
+
+    def train_argv(self) -> list[str]:
+        """The equivalent manual CLI flags (the bit-exactness pin's RHS)."""
+        ta = self.train_args()
+        argv = ["--compressor", ta["compressor"],
+                "--buckets", str(ta["buckets"]),
+                "--k", str(ta["k"]), "--rows", str(ta["rows"]),
+                "--width", str(ta["width"])]
+        if ta["bwd_chunks"] is not None:
+            argv += ["--bwd-chunks", str(ta["bwd_chunks"])]
+        return argv
+
+    def sim_kw(self) -> dict:
+        """``SimConfig`` field overrides for ``simulate --plan``: the tuned
+        exchange config plus the env's topology/link regime.
+
+        CALIBRATED alpha/beta are not expressible in SimConfig's preset
+        name — callers must also build the network from
+        ``self.env.network()`` and pass it to ``simulate(net=...)``, as
+        ``repro.launch.simulate --plan`` does."""
+        return {
+            "d": int(self.env.d), "method": self.choice.method,
+            "buckets": int(self.choice.buckets),
+            "bwd_chunks": int(self.choice.bwd_chunks),
+            "bwd_frac": float(self.env.bwd_frac),
+            "k": int(self.geometry["k"]), "rows": int(self.geometry["rows"]),
+            "width": int(self.geometry["width"]),
+            "shape": self.choice.shape, "topology": self.env.topology,
+            "link": self.env.link, "intra_link": self.env.intra_link,
+            "group_size": int(self.env.group_size),
+        }
+
+    def summary(self) -> str:
+        pr = self.predicted
+        return (f"{self.choice.label()}  step {pr['step_time'] * 1e3:.2f}ms  "
+                f"exposed comm {pr['exposed_comm'] * 1e3:.2f}ms  "
+                f"err {pr['error_proxy']:.3f}  "
+                f"compress x{pr['compression']:.0f}")
+
+
+def from_search(env: Env, space: SearchSpace, ranked: list, skipped: list,
+                *, seed: int, n_valid: int, error_probe: bool,
+                probe_d: int, top: int) -> TunePlan:
+    """Assemble the plan from a ranked [(Candidate, CandidateCost,
+    geometry)] list (best first). The winner's geometry rides along
+    resolved; runners-up keep candidate + cost for the report."""
+    if not ranked:
+        raise ValueError("search produced no valid candidates "
+                         f"({len(skipped)} skipped)")
+    best, best_cost, best_geo = ranked[0]
+    alts = [{"candidate": c.to_json(), "cost": cc.to_json(),
+             "geometry": dict(g)} for c, cc, g in ranked[1:top]]
+    return TunePlan(
+        env=env, choice=best,
+        geometry={"k": best_geo["k"], "rows": best_geo["rows"],
+                  "width": best_geo["width"], "buckets": best_geo["buckets"],
+                  "bucket_sizes": list(best_geo["bucket_sizes"])},
+        predicted=best_cost.to_json(),
+        alternatives=alts, skipped=list(skipped),
+        provenance={"seed": seed, "space": space.to_json(),
+                    "space_size": space.size, "n_valid": n_valid,
+                    "n_evaluated": len(ranked),
+                    "error_probe": bool(error_probe),
+                    "probe_d": int(probe_d), "version": VERSION})

@@ -1,0 +1,207 @@
+"""The joint configuration space of the gs-SGD exchange pipeline.
+
+A tuning problem splits into a fixed half and a searched half:
+
+``Env``        — the cluster/model/hardware the user cannot change per run:
+                 worker count P, flat gradient dimension d, topology and
+                 link regime (optionally CALIBRATED alpha/beta from a
+                 measured trace — see ``calibrate.py``), per-step compute
+                 time, the backward share of it, and whether the step uses
+                 microbatch accumulation (which the runtime forbids to
+                 combine with backward chunking).
+``Candidate``  — one point of the searched half: method, bucket count,
+                 backward-interleave chunks, sketch rows/width, top-k
+                 fraction, collective shape.
+``SearchSpace``— axis-aligned grids of candidates, enumerated in a
+                 deterministic order (the tuner's determinism guarantee
+                 starts here).
+
+Validation reuses the RUNTIME's own constructors: ``validate`` builds the
+candidate's real ``ExchangeReplay`` (which builds the real
+``compression.bucketize`` geometry, including the ``_scale_bucket`` k/width
+clamps) and calls the same ``gs_sgd.validate_exchange_config`` that
+``make_train_step`` raises through — so the searcher skips exactly the
+combos the runtime would reject, with the runtime's own error message as
+the skip reason, instead of crashing mid-sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from repro.core.gs_sgd import validate_exchange_config
+from repro.sim.network import PRESETS, LinkSpec, NetworkModel, make_network
+from repro.sim.replay import ExchangeReplay
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    """Fixed half of a tuning problem (see module docstring).
+
+    ``link_alpha`` / ``link_beta``: calibrated Eq. 1 overrides for the
+    (inter-group, on 'hier') link — ``None`` keeps the named preset. Set
+    them via ``calibrate.Calibration.apply`` to anchor predictions to a
+    measured trace.
+    """
+
+    p: int
+    d: int
+    topology: str = "flat"            # 'flat' | 'hier'
+    link: str = "1gbe"                # preset name (PRESETS)
+    intra_link: str = "ici"
+    group_size: int = 8
+    t_compute: float = 0.1            # seconds of fwd+bwd per step
+    bwd_frac: float = 2 / 3           # backward share of t_compute
+    microbatch: int | None = None     # runtime accumulation (constrains space)
+    link_alpha: float | None = None   # calibrated Eq. 1 startup (s)
+    link_beta: float | None = None    # calibrated Eq. 1 inverse bw (s/B)
+
+    def link_spec(self) -> LinkSpec:
+        base = PRESETS[self.link]
+        if self.link_alpha is None and self.link_beta is None:
+            return base
+        return LinkSpec(
+            alpha=base.alpha if self.link_alpha is None else self.link_alpha,
+            beta=base.beta if self.link_beta is None else self.link_beta)
+
+    def network(self) -> NetworkModel:
+        return make_network(self.topology, link=self.link_spec(),
+                            group_size=self.group_size, intra=self.intra_link)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Env":
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One searched configuration. Defaults are the CLI defaults — the
+    all-defaults candidate is the un-tuned baseline every sweep compares
+    against (``benchmarks/tune_sweep.py`` asserts tuned <= this)."""
+
+    method: str = "gs-sgd"
+    buckets: int = 1
+    bwd_chunks: int = 1
+    rows: int | str = 5               # sketch depth; 'log' = O(log d)
+    width: int | None = None          # sketch row width (None = default)
+    k_frac: float | None = None       # top-k as a fraction of d (None = 0.4%)
+    shape: str | None = None          # collective shape (None = per-method)
+
+    def k(self, d: int) -> int | None:
+        if self.k_frac is None:
+            return None
+        return max(1, int(self.k_frac * d))
+
+    def key(self) -> tuple:
+        """Canonical total order — the deterministic tie-breaker."""
+        return (self.method, self.buckets, self.bwd_chunks, str(self.rows),
+                -1 if self.width is None else self.width,
+                -1.0 if self.k_frac is None else self.k_frac,
+                self.shape or "")
+
+    def label(self) -> str:
+        bits = [self.method, f"b{self.buckets}", f"K{self.bwd_chunks}",
+                f"r{self.rows}"]
+        if self.width is not None:
+            bits.append(f"w{self.width}")
+        if self.k_frac is not None:
+            bits.append(f"k{self.k_frac:g}")
+        if self.shape is not None:
+            bits.append(self.shape)
+        return "/".join(bits)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Candidate":
+        return cls(**d)
+
+
+def _tup(xs) -> tuple:
+    return tuple(xs)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Axis-aligned candidate grid. ``candidates()`` enumerates the cross
+    product in a fixed axis order — same space, same order, every time."""
+
+    methods: tuple = ("gs-sgd",)
+    buckets: tuple = (1, 2, 4, 8)
+    bwd_chunks: tuple = (1, 2, 4)
+    rows: tuple = (5,)
+    widths: tuple = (None,)
+    k_fracs: tuple = (None,)
+    shapes: tuple = (None,)
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for ax in (self.methods, self.buckets, self.bwd_chunks, self.rows,
+                   self.widths, self.k_fracs, self.shapes):
+            n *= len(ax)
+        return n
+
+    def candidates(self):
+        for m, b, kc, r, w, kf, sh in itertools.product(
+                self.methods, self.buckets, self.bwd_chunks, self.rows,
+                self.widths, self.k_fracs, self.shapes):
+            yield Candidate(method=m, buckets=int(b), bwd_chunks=int(kc),
+                            rows=r, width=w, k_frac=kf, shape=sh)
+
+    def to_json(self) -> dict:
+        return {k: list(v) for k, v in dataclasses.asdict(self).items()}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SearchSpace":
+        return cls(**{k: _tup(v) for k, v in d.items()})
+
+
+def validate(cand: Candidate, env: Env) -> ExchangeReplay:
+    """Build the candidate's replay through the REAL runtime constructors.
+
+    Raises ``ValueError`` exactly where the runtime would: the shared
+    ``validate_exchange_config`` (microbatch + bwd_chunks), the
+    ``ExchangeReplay``/collective-shape contracts (gTop-k is tree-only,
+    Sketched-SGD is PS-only), and the staged-compressor requirement of the
+    readiness interleave (``make_train_step`` silently falls back to the
+    post-accumulation exchange for non-staged compressors, so crediting
+    them with interleave savings would mis-rank the space).
+    """
+    validate_exchange_config(
+        microbatch=env.microbatch,
+        bwd_chunks=cand.bwd_chunks if cand.bwd_chunks > 1 else None)
+    rep = ExchangeReplay(cand.method, env.d, buckets=cand.buckets,
+                         k=cand.k(env.d), rows=cand.rows, width=cand.width,
+                         shape=cand.shape, group_size=env.group_size)
+    if cand.bwd_chunks > 1 and not all(
+            hasattr(c, "stage_encode") for c in rep.bc.parts):
+        raise ValueError(
+            f"bwd_chunks={cand.bwd_chunks} needs the staged gs-sgd "
+            f"compressor; the runtime runs {cand.method!r} through the "
+            "post-accumulation exchange instead")
+    return rep
+
+
+def enumerate_valid(space: SearchSpace, env: Env
+                    ) -> tuple[list[tuple[Candidate, ExchangeReplay]],
+                               list[dict]]:
+    """(valid (candidate, replay) pairs, skipped [{candidate, reason}]).
+
+    Skips — never raises — on the runtime's own rejections, so one bad
+    axis combination cannot kill a sweep.
+    """
+    valid, skipped = [], []
+    for c in space.candidates():
+        try:
+            rep = validate(c, env)
+        except (ValueError, AssertionError) as e:
+            skipped.append({"candidate": c.to_json(), "reason": str(e)})
+            continue
+        valid.append((c, rep))
+    return valid, skipped

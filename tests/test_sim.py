@@ -334,3 +334,63 @@ def test_sim_result_json_schema():
     assert js["steps"][0]["p"] == 8
     for key in ("compute", "stall", "encode", "comm", "recover"):
         assert js["totals"][key] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# shared-recurrence invariant: sim step_cost and the benchmark bucket model
+# are two consumers of ONE compression.interleaved_schedule_time
+# ---------------------------------------------------------------------------
+
+
+def test_step_cost_and_model_bucket_pipeline_share_the_recurrence():
+    """``sim/replay.step_cost`` and ``benchmarks.time_breakdown.
+    model_bucket_pipeline`` must price the same config identically up to
+    one documented convention: the replay's exact-value second round also
+    pays wire time for the broadcast leg (k floats back), which CommStats
+    does not count as injected bytes — exactly ``k_b * 4 * beta`` per
+    bucket, pinned below. Everything else (geometry via ``bucketize``,
+    encode streaming, readiness events, the 3-stage pipeline recurrence)
+    must agree because both import it from ``core.compression``."""
+    from benchmarks.time_breakdown import (hbm_encode_time,
+                                           model_bucket_pipeline)
+    from repro.sim.network import LINK_1GBE, Homogeneous
+    from repro.sim.replay import bucket_readiness, event_times
+
+    d, p, buckets, chunks = 1 << 20, 8, 4, 4
+    k, rows, width = 4096, 5, 1 << 14
+    tb = 0.05
+    net = Homogeneous(LINK_1GBE)
+    # the benchmark model prices GsSGD.comm_stats with the production
+    # allreduce_mode='psum' (ring) wire model — replay the matching shape
+    rep = ExchangeReplay("gs-sgd", d, buckets=buckets, k=k, rows=rows,
+                         width=width, shape="ring")
+    ids = list(range(p))
+    st = rep.stage_times(net, ids)
+    mb = model_bucket_pipeline(d, buckets, P=p, k=k, width=width, rows=rows,
+                               alpha=LINK_1GBE.alpha, beta=LINK_1GBE.beta,
+                               t_backward=tb, bwd_chunks=chunks)
+    assert mb["n_buckets"] == rep.bc.spec.n == buckets
+    for i, (c, d_b) in enumerate(zip(rep.bc.parts, rep.bc.spec.sizes)):
+        per = mb["per_bucket"][i]
+        assert per["d"] == d_b and per["k"] == c.k
+        assert per["width"] == c.sketch.width
+        assert st.t_enc[i] == pytest.approx(
+            hbm_encode_time(d_b, c.sketch.rows), rel=1e-12)
+        delta = c.k * 4 * LINK_1GBE.beta  # second-round broadcast leg
+        assert st.t_comm[i] == pytest.approx(per["t_comm"] + delta,
+                                             rel=1e-12)
+    # feeding the replay's own stage times through the shared recurrence
+    # reproduces step_cost's encode/comm decomposition exactly
+    ready = [event_times(tb, chunks)[e] for e in bucket_readiness(
+        rep.bc.spec.offsets, rep.bc.spec.sizes, d, chunks)]
+    _, pipelined, _, done_enc = comp.interleaved_schedule_time(
+        list(st.t_enc), list(st.t_comm), ready, t_backward=tb)
+    pc = rep.step_cost(net, ids, overlap=True, t_backward=tb,
+                       bwd_chunks=chunks, stages=st)
+    assert pc.encode == pytest.approx(max(0.0, done_enc - tb))
+    assert pc.comm == pytest.approx(pipelined - max(tb, done_enc))
+    # end-to-end exposure: the recurrence is monotone and sub-additive in
+    # t_comm, so sim-exposed exceeds the model by at most the summed delta
+    delta_total = sum(c.k * 4 * LINK_1GBE.beta for c in rep.bc.parts)
+    gap = (pc.encode + pc.comm) - mb["t_exposed"]
+    assert -1e-12 <= gap <= delta_total + 1e-12

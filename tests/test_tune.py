@@ -1,0 +1,324 @@
+"""repro.tune: deterministic search, plan round-trip, bit-exact
+--auto-tune application, trace calibration recovery, runtime-validation
+reuse in the searcher, and the static CommStats accessors the trace
+capture path depends on."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as comp
+from repro.sim import ComputeModel, SimConfig, predict_step, simulate
+from repro.sim.network import LINK_1GBE
+from repro.tune import (Candidate, CostModel, Env, SearchSpace, TunePlan,
+                        enumerate_valid, fit, load_trace, search,
+                        synthetic_trace, validate)
+
+ENV = Env(p=8, d=200_000, t_compute=0.05)
+SMALL = SearchSpace(buckets=(1, 2), bwd_chunks=(1, 2), rows=(3,))
+
+
+# ---------------------------------------------------------------------------
+# determinism + plan round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_search_is_deterministic():
+    a = search(SMALL, ENV, top=3, seed=0, probe_d=1 << 12)
+    b = search(SMALL, ENV, top=3, seed=0, probe_d=1 << 12)
+    assert a.to_json() == b.to_json()
+
+
+def test_plan_round_trip(tmp_path):
+    plan = search(SMALL, ENV, top=3, seed=0, error_probe=False)
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    back = TunePlan.load(path)
+    assert back.to_json() == plan.to_json()
+    assert back.train_args() == plan.train_args()
+    assert back.train_argv() == plan.train_argv()
+    assert back.sim_kw() == plan.sim_kw()
+    # the schema guard rejects foreign documents
+    (tmp_path / "junk.json").write_text(json.dumps({"schema": "nope"}))
+    with pytest.raises(ValueError):
+        TunePlan.load(str(tmp_path / "junk.json"))
+
+
+def test_plan_applies_to_simconfig():
+    plan = search(SMALL, ENV, seed=0, error_probe=False)
+    cfg = SimConfig(p=4, steps=2, **plan.sim_kw())
+    assert cfg.method == plan.choice.method
+    assert cfg.buckets == plan.choice.buckets
+    assert cfg.k == plan.geometry["k"]
+
+
+def test_sim_only_plans_refuse_train_application():
+    """A tuned collective shape has no training-CLI equivalent; applying
+    it to train must fail loudly, never silently drop the shape."""
+    space = SearchSpace(buckets=(1,), bwd_chunks=(1,), rows=(3,),
+                        shapes=("hier",))
+    plan = search(space, ENV, seed=0, error_probe=False)
+    with pytest.raises(ValueError, match="shape"):
+        plan.train_args()
+    # ...but the simulator applies it fine
+    assert plan.sim_kw()["shape"] == "hier"
+
+
+def test_simulate_plan_applies_calibrated_link(tmp_path):
+    """A calibrated alpha must reach the event loop through
+    ``simulate --plan`` — the preset name alone would silently lose it."""
+    from repro.launch.simulate import main as sim_main
+
+    plan = search(SMALL, ENV, seed=0, error_probe=False)
+    slow_env = dataclasses.replace(plan.env, link_alpha=0.05)
+    slow = dataclasses.replace(plan, env=slow_env)
+    p_fast, p_slow = str(tmp_path / "fast.json"), str(tmp_path / "slow.json")
+    plan.save(p_fast)
+    slow.save(p_slow)
+    argv = ["--steps", "2", "--compute-jitter", "0",
+            "--no-drop-stragglers"]
+    tot_fast = sim_main(["--plan", p_fast] + argv)
+    tot_slow = sim_main(["--plan", p_slow] + argv)
+    assert tot_slow["comm"] > tot_fast["comm"] + 0.01  # alpha=50ms/round
+
+
+# ---------------------------------------------------------------------------
+# the searcher reuses the runtime's own validation (skip, don't crash)
+# ---------------------------------------------------------------------------
+
+
+def test_searcher_skips_runtime_rejected_combos():
+    space = SearchSpace(methods=("gs-sgd", "gtopk", "sketched-sgd"),
+                        buckets=(1,), bwd_chunks=(1, 2), rows=(3,),
+                        shapes=(None, "ring"))
+    valid, skipped = enumerate_valid(space, ENV)
+    labels = {(c.method, c.bwd_chunks, c.shape) for c, _ in valid}
+    # gTop-k's merge is tree-only; Sketched-SGD aggregates at a PS — both
+    # runtime ValueErrors become skips, and only gs-sgd is staged enough
+    # for the readiness interleave
+    assert ("gtopk", 1, "ring") not in labels
+    assert ("sketched-sgd", 1, "ring") not in labels
+    assert ("gtopk", 2, None) not in labels
+    assert ("sketched-sgd", 2, None) not in labels
+    assert ("gs-sgd", 2, "ring") in labels
+    assert ("gtopk", 1, None) in labels
+    reasons = " | ".join(s["reason"] for s in skipped)
+    assert "tree" in reasons and "parameter" in reasons.lower()
+    # the sweep itself completes despite the poisoned axes
+    plan = search(space, ENV, seed=0, error_probe=False)
+    assert len(plan.skipped) == len(skipped)
+
+
+def test_searcher_skips_bwd_chunks_under_microbatch():
+    env = dataclasses.replace(ENV, microbatch=2)
+    valid, skipped = enumerate_valid(SMALL, env)
+    assert all(c.bwd_chunks == 1 for c, _ in valid)
+    assert skipped and all("microbatch" in s["reason"] for s in skipped)
+    # identical wording to the runtime's own rejection
+    from repro.core.gs_sgd import make_train_step  # noqa: F401
+    from repro.core.gs_sgd import validate_exchange_config
+    with pytest.raises(ValueError, match="microbatch"):
+        validate_exchange_config(microbatch=2, bwd_chunks=2)
+
+
+def test_degenerate_geometry_combos_survive_the_sweep():
+    """Tiny-d / many-buckets / floor-width combos go through the runtime's
+    own ``_scale_bucket`` clamps instead of crashing the sweep."""
+    env = Env(p=4, d=5_000, t_compute=0.01)
+    space = SearchSpace(buckets=(1, 16), bwd_chunks=(1, 4), rows=(3,),
+                        widths=(256,), k_fracs=(0.0005,))
+    plan = search(space, env, seed=0, probe_d=1 << 10)
+    assert plan.predicted["step_time"] > 0
+    # every per-bucket width respects the runtime floor
+    rep = validate(Candidate(buckets=16, rows=3, width=256,
+                             k_frac=0.0005), env)
+    for c in rep.bc.parts:
+        assert c.sketch.width >= comp._MIN_BUCKET_WIDTH
+        assert c.k >= 1
+
+
+# ---------------------------------------------------------------------------
+# cost model: sim agreement + fidelity probe sanity
+# ---------------------------------------------------------------------------
+
+
+def test_predict_step_matches_cluster_sim_steady_state():
+    """The tuner's one-step price IS the event-loop per-step cost for a
+    jitter-free, fault-free run — rankings transfer to full sims."""
+    kw = dict(buckets=4, bwd_chunks=2, k=2000, rows=5, width=2048)
+    pred = predict_step("gs-sgd", 300_000, 16, topology="hier",
+                        t_compute=0.04, bwd_frac=0.5, **kw)
+    cfg = SimConfig(p=16, d=300_000, method="gs-sgd", steps=3,
+                    topology="hier", bwd_frac=0.5,
+                    compute=ComputeModel(mean=0.04, jitter=0.0),
+                    drop_stragglers=False, **kw)
+    res = simulate(cfg)
+    assert res.makespan / len(res.records) == pytest.approx(
+        pred["step_time"], rel=1e-9)
+
+
+def test_error_probe_orders_geometries_sanely():
+    cm = CostModel(ENV, probe_d=1 << 12)
+    wide = cm.evaluate(Candidate(width=8192))
+    narrow = cm.evaluate(Candidate(width=256))
+    assert 0.0 <= wide.error_proxy <= narrow.error_proxy <= 1.0
+    assert cm.evaluate(Candidate(method="dense")).error_proxy == 0.0
+    # more sketch payload => less compression
+    assert wide.compression < narrow.compression
+
+
+def test_max_error_constraint_filters_choices():
+    env = Env(p=8, d=100_000, t_compute=0.05)
+    space = SearchSpace(buckets=(1,), bwd_chunks=(1,), rows=(3,),
+                        widths=(256, 4096))
+    open_plan = search(space, env, seed=0, probe_d=1 << 12)
+    cap = search(space, env, seed=0, probe_d=1 << 12,
+                 max_error=open_plan.predicted["error_proxy"] * 0.999
+                 if open_plan.predicted["error_proxy"] > 0 else 0.5)
+    assert any("error_proxy" in s["reason"] for s in cap.skipped) or \
+        cap.predicted["error_proxy"] <= open_plan.predicted["error_proxy"]
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+
+PLANT = dict(alpha=5e-4, beta=8e-9, t_compute=0.05)
+CELLS = [(12, 1.5e5), (48, 1.5e5), (12, 4.0e6), (48, 4.0e6), (24, 1.0e6)]
+
+
+def test_calibration_recovers_planted_parameters_exactly():
+    cal = fit(synthetic_trace(cells=CELLS, steps=4, **PLANT))
+    assert cal.alpha == pytest.approx(PLANT["alpha"], rel=1e-6)
+    assert cal.beta == pytest.approx(PLANT["beta"], rel=1e-6)
+    assert cal.t_compute == pytest.approx(PLANT["t_compute"], rel=1e-6)
+    assert cal.residual < 1e-9
+
+
+def test_calibration_recovers_planted_parameters_under_noise():
+    cal = fit(synthetic_trace(cells=CELLS, steps=20, jitter=0.02, seed=3,
+                              **PLANT))
+    assert cal.alpha == pytest.approx(PLANT["alpha"], rel=0.15)
+    assert cal.beta == pytest.approx(PLANT["beta"], rel=0.15)
+    assert cal.t_compute == pytest.approx(PLANT["t_compute"], rel=0.05)
+    env = cal.apply(ENV)
+    assert env.link_alpha == cal.alpha and env.link_beta == cal.beta
+    assert env.t_compute == cal.t_compute
+    # calibrated env prices comm differently from the preset
+    slow = dataclasses.replace(env, link_alpha=0.05)
+    c_fast = CostModel(env, error_probe=False).evaluate(Candidate())
+    c_slow = CostModel(slow, error_probe=False).evaluate(Candidate())
+    assert c_slow.step_time > c_fast.step_time
+
+
+def test_calibration_rejects_unidentifiable_traces():
+    flat = synthetic_trace(cells=[(24, 1e6)], steps=10, **PLANT)
+    with pytest.raises(ValueError, match="identifiable|separable"):
+        fit(flat)
+    with pytest.raises(ValueError, match="records"):
+        fit({"schema": "repro.tune/trace@1", "records": []})
+
+
+def test_calibration_accepts_simulate_curves_shape():
+    a, b, c0 = PLANT["alpha"], PLANT["beta"], PLANT["t_compute"]
+    curves = {"curves": [
+        {"step": i, "time_sim": c0 + r * a + nb * b, "rounds": r,
+         "bytes": nb, "compute": c0}
+        for i, (r, nb) in enumerate(CELLS)]}
+    cal = fit(curves, drop_first=0)
+    assert cal.alpha == pytest.approx(a, rel=1e-6)
+    assert cal.beta == pytest.approx(b, rel=1e-6)
+
+
+def test_example_fixture_trace_calibrates(tmp_path):
+    recs = load_trace("examples/traces/step_times_1gbe.json")
+    cal = fit(recs)
+    assert cal.alpha == pytest.approx(LINK_1GBE.alpha, rel=0.15)
+    assert cal.beta == pytest.approx(LINK_1GBE.beta, rel=0.15)
+    assert cal.t_compute == pytest.approx(0.12, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# static CommStats accessors == the stats the running step returns
+# ---------------------------------------------------------------------------
+
+
+def _probe_step_stats(c, d, p=2):
+    """Run one vmapped step and capture the CommStats it returns."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (p, d), jnp.float32)
+    state = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (p,) + a.shape), c.init(d))
+    box = {}
+
+    def step(st, gg):
+        u, _, stats = c.step(st, gg, axis="data", nworkers=p)
+        box["stats"] = stats
+        return u
+
+    jax.vmap(step, axis_name="data")(state, g)
+    return box["stats"]
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("dense", {}),
+    ("topk", {"k": 64}),
+    ("gtopk", {"k": 64}),
+    ("sketched-sgd", {"k": 64, "rows": 3, "width": 256}),
+    ("gs-sgd", {"k": 64, "rows": 3, "width": 256}),
+    ("fetchsgd", {"k": 64, "rows": 3, "width": 256}),
+    ("signsgd", {}),
+    ("powersgd", {}),
+])
+def test_static_comm_stats_match_running_step(name, kw):
+    d, p = 2048, 2
+    c = comp.make(name, **kw)
+    ran = _probe_step_stats(c, d, p)
+    static = comp.static_comm_stats(c, d, p)
+    assert static.bytes_out == ran.bytes_out
+    assert static.rounds == ran.rounds
+    assert static.label == ran.label
+
+
+def test_static_comm_stats_bucketed_and_none():
+    d, p = 2048, 2
+    bc = comp.bucketize(comp.make("gs-sgd", k=64, rows=3, width=256),
+                        comp.even_bucket_sizes(d, 3))
+    ran = _probe_step_stats(bc, d, p)
+    static = comp.static_comm_stats(bc, d, p)
+    assert static.per_bucket == ran.per_bucket
+    # compressor=None is the dense-psum baseline path
+    assert comp.static_comm_stats(None, d, p).bytes_out == \
+        comp.make("dense").comm_stats(d, p).bytes_out
+
+
+# ---------------------------------------------------------------------------
+# --auto-tune resolution is bit-exact vs the same flags passed manually
+# ---------------------------------------------------------------------------
+
+
+def test_auto_tune_resolution_bit_exact_vs_manual_flags(tmp_path):
+    """A plan applied via ``train --auto-tune`` must route through the
+    very ``make_train_step`` path the manual flags take: the two runs'
+    loss histories agree to the last bit."""
+    from repro.launch.train import main as train_main
+    from repro.launch.tune import _arch_d
+
+    d = _arch_d("qwen3-4b", True, 2)
+    env = Env(p=2, d=d, t_compute=0.05)
+    space = SearchSpace(buckets=(4,), bwd_chunks=(2,), rows=(3,),
+                        widths=(1024,), k_fracs=(0.01,))
+    plan = search(space, env, top=1, seed=0, error_probe=False)
+    assert plan.train_args()["bwd_chunks"] == 2   # non-trivial resolution
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+
+    common = ["--smoke", "--workers", "2", "--steps", "2", "--batch", "4",
+              "--seq", "16", "--log-every", "5"]
+    h_auto = train_main(common + ["--auto-tune", path])["history"]
+    h_manual = train_main(common + plan.train_argv())["history"]
+    assert h_auto == h_manual  # bit-exact, not approx
