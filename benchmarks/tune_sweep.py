@@ -48,7 +48,10 @@ def run_cell(p: int, topology: str, d: int, *, t_compute: float,
             "default": default.to_json(),
             "tuned": {"candidate": plan.choice.to_json(),
                       "geometry": dict(plan.geometry),
-                      "cost": dict(plan.predicted)},
+                      "cost": dict(plan.predicted),
+                      # the winner as a ready-to-run RunSpec (repro.api):
+                      # apply with train --spec / simulate --spec
+                      "spec": plan.spec.to_json()},
             "saving_s": default.step_time - tuned,
             "saving_frac": 1.0 - tuned / default.step_time}
 

@@ -11,12 +11,11 @@
 import jax
 import jax.numpy as jnp
 
-from repro.configs import SMOKES
+from repro.api import ClusterSpec, ExchangeSpec, RunSpec, SketchSpec
 from repro.core import count_sketch as cs
 from repro.core import heavymix as hm
-from repro.core.gs_sgd import MeshAxes, make_state, make_train_step
+from repro.core.gs_sgd import make_state
 from repro.models.flatten import init_flat_params
-from repro.optim import make as make_opt
 
 
 def part1_sketch_and_recover():
@@ -44,13 +43,17 @@ def part1_sketch_and_recover():
 
 def part2_distributed_training():
     print("=== 2. 4-worker gs-SGD training (vmap sim, collective-exact) ===")
-    cfg = SMOKES["qwen3-4b"]
-    P = 4
-    ma = MeshAxes(tp=1, data=P, tp_axis=None, data_axis="data")
-    opt = make_opt("adamw", lr=2e-3)
-    ts = make_train_step(cfg, ma, opt, dp_mode="dp", compressor_name="gs-sgd",
-                         compressor_kw=dict(k=4096, rows=5, width=8192),
-                         remat=False, dtype=jnp.float32)
+    # ONE spec describes the whole run (repro.api, DESIGN.md §9) — the
+    # same object the train/simulate/tune CLIs build from their flags.
+    spec = RunSpec(
+        arch="qwen3-4b", smoke=True, lr=2e-3, remat=False,
+        exchange=ExchangeSpec(compressor="gs-sgd",
+                              sketch=SketchSpec(k=4096, rows=5, width=8192)),
+        cluster=ClusterSpec(p=4))
+    spec.validate()
+    cfg, P = spec.arch_config(), spec.cluster.p
+    opt = spec.make_optimizer()
+    ts = spec.make_train_step(opt=opt)   # core.gs_sgd.make_train_step(spec=)
     params = init_flat_params(cfg, jax.random.PRNGKey(0), 1, ts.fs)
     state = make_state(params, opt, ts.compressor, ts.d_local)
     state = jax.tree_util.tree_map(

@@ -1,0 +1,26 @@
+"""repro.api — the typed RunSpec family that drives every surface.
+
+One declaration per knob: ``spec.py`` holds the frozen, validated,
+JSON-round-trippable specs (and THE default table); ``cli.py`` generates
+each launch CLI's argparse block from the same field metadata. See
+DESIGN.md §9.
+
+    spec = RunSpec.load("examples/specs/qwen3_smoke.json")
+    ts   = spec.make_train_step()          # core.gs_sgd.TrainStep
+    cfg  = spec.sim_config()               # repro.sim.SimConfig
+    env  = spec.env()                      # repro.tune.Env
+"""
+
+from repro.api.cli import (SPEC_TREE, SURFACES, add_spec_args, apply_args,
+                           build_parser, iter_cli_fields)
+from repro.api.spec import (SCHEMA, SHAPES, WIRE_DTYPES, ClusterSpec,
+                            ExchangeSpec, RunSpec, SketchSpec,
+                            check_exchange_config, coerce_rows,
+                            parse_slow_workers)
+
+__all__ = [
+    "SCHEMA", "SHAPES", "SPEC_TREE", "SURFACES", "WIRE_DTYPES",
+    "ClusterSpec", "ExchangeSpec", "RunSpec", "SketchSpec",
+    "add_spec_args", "apply_args", "build_parser", "check_exchange_config",
+    "coerce_rows", "iter_cli_fields", "parse_slow_workers",
+]

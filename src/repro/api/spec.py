@@ -1,0 +1,621 @@
+"""repro.api — ONE typed spec family that drives every surface.
+
+The exchange configuration used to be declared five times — the
+``make_train_step`` kwargs, ``SimConfig``, the tuner's ``Env``/``Candidate``,
+and the hand-written argparse blocks of the train / simulate / tune CLIs —
+with drifting defaults (``train --width 4096`` vs ``compression.make``'s
+16384) and surface-dependent feature gaps. This module is the single
+source of truth (DESIGN.md §9):
+
+``SketchSpec``   — count-sketch geometry (rows / width / k / seed). THE
+                   default table: every CLI default is generated from the
+                   field defaults here, so they cannot drift again.
+``ExchangeSpec`` — the gradient-exchange pipeline: compressor, buckets,
+                   overlap, backward-interleave chunks, microbatch
+                   accumulation, collective shape, wire knobs.
+``ClusterSpec``  — the cluster the run targets: worker count, topology,
+                   link regimes (optionally calibrated alpha/beta),
+                   heterogeneous slow workers, fault policy, compute model.
+``RunSpec``      — everything: arch/data/optimizer/steps/seed/ckpt plus a
+                   nested ``ExchangeSpec`` and ``ClusterSpec``.
+
+All specs are frozen, validated, and JSON-round-trippable
+(``to_json``/``from_json``/``save``/``load``). ``RunSpec`` converts into
+every surface's native object — ``sim_config()`` -> ``repro.sim.SimConfig``,
+``env()`` -> ``repro.tune.Env``, ``make_train_step()`` ->
+``core.gs_sgd.TrainStep`` — and the launch CLIs build their argparse
+blocks from the field metadata here (see ``repro.api.cli``), one
+declaration per knob: flag name, type, default, help.
+
+This module imports ONLY the standard library at module level (everything
+heavy is imported lazily inside methods), so any layer — including
+``core.gs_sgd`` — may import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any
+
+SCHEMA = "repro.api/runspec@1"
+
+_UNSET = object()
+
+# Wire bytes per element for the sketch payload dtype (the gs-SGD
+# ``wire_dtype`` knob; the sim replay prices bytes with the same table).
+WIRE_DTYPES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+# Collective shapes the simulator replays (sim/network.allreduce_cost).
+SHAPES = ("tree", "ring", "hier", "ps")
+
+# Methods the simulator's ExchangeReplay can price ('none' maps to dense).
+SIM_METHODS = ("gs-sgd", "gtopk", "sketched-sgd", "dense")
+
+TOPOLOGIES = ("flat", "hier")
+LINKS = ("1gbe", "10gbe", "ici")
+
+
+# ---------------------------------------------------------------------------
+# field declaration: dataclass field + the CLI surface metadata in one place
+# ---------------------------------------------------------------------------
+
+
+def _field(default=_UNSET, *flags, parse=None, const=_UNSET, choices=None,
+           help="", surfaces=(), metavar=None, dest=None, factory=None):
+    """Declare a spec field once: default + flag names + type + help.
+
+    ``surfaces`` names the CLIs that expose the flag ('train', 'sim',
+    'tune', 'serve'); an empty tuple means programmatic/JSON only.
+    ``const`` makes the flag a ``store_const`` toggle (e.g. ``--no-overlap``
+    stores False into ``overlap``). ``choices`` may be a callable for
+    lazily-computed sets (e.g. the arch registry).
+    """
+    meta = {}
+    if flags:
+        meta["cli"] = {"flags": flags, "parse": parse, "const": const,
+                       "choices": choices, "help": help,
+                       "surfaces": tuple(surfaces), "metavar": metavar,
+                       "dest": dest}
+    if factory is not None:
+        return dataclasses.field(default_factory=factory, metadata=meta)
+    return dataclasses.field(default=default, metadata=meta)
+
+
+# -- shared CLI parse helpers (string -> typed value) -----------------------
+
+
+def coerce_rows(v) -> int | str:
+    """Sketch depth: an int, a numeric string (the CLI path), or 'log'."""
+    if isinstance(v, str):
+        if v == "log":
+            return v
+        try:
+            v = int(v)
+        except ValueError:
+            raise ValueError(
+                f"rows must be a positive int or 'log', got {v!r}") from None
+    if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+        raise ValueError(f"rows must be a positive int or 'log', got {v!r}")
+    return int(v)
+
+
+# Returned by the optional-value parsers for an explicit 'none' so
+# ``cli.apply_args`` can distinguish "reset to None" from "flag not given"
+# (argparse's default for an omitted generated flag is None = inherit).
+EXPLICIT_NONE = type("ExplicitNone", (), {"__repr__": lambda s: "none"})()
+
+
+def parse_opt_int(s: str):
+    return EXPLICIT_NONE if s.lower() in ("none", "") else int(s)
+
+
+def parse_opt_str(s: str):
+    return EXPLICIT_NONE if s.lower() in ("none", "") else s
+
+
+def parse_slow_workers(s: str) -> dict[int, float]:
+    """``'ID:FACTOR,ID:FACTOR'`` -> {worker_id: slowdown_factor}."""
+    out: dict[int, float] = {}
+    for part in filter(None, s.split(",")):
+        try:
+            wid, factor = part.split(":")
+            out[int(wid)] = float(factor)
+        except ValueError:
+            raise ValueError(
+                f"--slow-workers expects 'ID:FACTOR,...', got {part!r}"
+            ) from None
+    return out
+
+
+def check_exchange_config(*, microbatch: int | None = None,
+                          bwd_chunks: int | None = None) -> None:
+    """The step-config constraints every surface enforces identically.
+
+    ``core.gs_sgd.validate_exchange_config`` (raised through by
+    ``make_train_step``), ``ExchangeSpec.validate`` (raised by every CLI),
+    and the tuner's skip rules all call THIS function, so the three
+    surfaces reject the combo with the same message.
+    """
+    if bwd_chunks is not None and microbatch is not None:
+        raise ValueError("bwd_chunks interleaves the exchange with ONE "
+                         "backward pass; combining it with microbatch "
+                         "accumulation is not supported")
+
+
+def _arch_choices():
+    from repro.configs import ARCHS
+    return list(ARCHS)
+
+
+def _compressor_choices():
+    from repro.core.compression import REGISTRY
+    return sorted(REGISTRY) + ["none"]
+
+
+# ---------------------------------------------------------------------------
+# SketchSpec — the one sketch-geometry default table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Count-sketch geometry. THE default table for every surface.
+
+    ``width=16384`` matches ``compression.make``'s library default (the
+    train CLI's old 4096 was drift, now fixed); ``k=None``/``width=None``
+    mean "derive from d" via the paper-regime rules of
+    ``sim.replay.default_geometry`` (k: 0.4% of d, Sec. IV-A; width: ~k/2
+    rounded to a power of two); ``rows`` may be ``'log'`` for the O(log d)
+    union-bound depth. ``resolve(d)`` returns the all-int geometry every
+    runtime object is built from.
+    """
+
+    rows: int | str = _field(
+        5, "--rows", parse=coerce_rows, surfaces=("train", "sim"),
+        help="count-sketch depth: an int, or 'log' for O(log d)")
+    width: int | None = _field(
+        16384, "--width", parse=parse_opt_int, surfaces=("train", "sim"),
+        help="count-sketch row width ('none' = derive ~k/2 from d)")
+    k: int | None = _field(
+        None, "--k", parse=parse_opt_int, surfaces=("train", "sim"),
+        help="top-k recovered per step ('none' = 0.4%% of d, Sec. IV-A)")
+    seed: int = _field(
+        0, "--sketch-seed", parse=int, surfaces=("train", "sim"),
+        dest="sketch_seed", help="count-sketch hash seed")
+
+    def __post_init__(self):
+        object.__setattr__(self, "rows", coerce_rows(self.rows))
+        for f in ("width", "k"):
+            v = getattr(self, f)
+            if v is not None:
+                if int(v) < 1:
+                    raise ValueError(f"{f} must be >= 1, got {v}")
+                object.__setattr__(self, f, int(v))
+
+    def resolve(self, d: int) -> "SketchSpec":
+        """All-int geometry for a flat gradient of dimension ``d`` —
+        the single derivation shared by train, sim, and tune."""
+        from repro.sim.replay import default_geometry
+        k, rows, width = default_geometry(int(d), k=self.k, rows=self.rows,
+                                          width=self.width)
+        return dataclasses.replace(self, k=k, rows=rows, width=width)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "SketchSpec":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# ExchangeSpec — the gradient-exchange pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSpec:
+    """One gradient exchange: compressor + schedule + wire knobs.
+
+    ``buckets=None`` is the monolithic exchange (``buckets=1`` runs the
+    bucketed code path with identical numerics); ``bwd_chunks=None`` is
+    the monolithic backward. ``shape`` overrides the simulator's
+    collective shape and has NO training equivalent (train refuses specs
+    that set it, same as tuned plans). ``wire_dtype`` puts the sketch on
+    the wire in fewer bytes; ``allreduce_mode`` picks psum (TPU-native)
+    vs the faithful Alg. 1 ppermute tree.
+    """
+
+    compressor: str = _field(
+        "gs-sgd", "--compressor", "--method", choices=_compressor_choices,
+        surfaces=("train", "sim"),
+        help="gradient compressor ('none'/'dense' = uncompressed baseline)")
+    buckets: int | None = _field(
+        None, "--buckets", parse=parse_opt_int, surfaces=("train", "sim"),
+        help="bucketed exchange: ~N buckets split at FlatSpec segment "
+             "boundaries ('none' = monolithic)")
+    overlap: bool = _field(
+        True, "--no-overlap", const=False, surfaces=("train", "sim"),
+        dest="overlap",
+        help="disable the pipelined bucket schedule (sequential exchange)")
+    bwd_chunks: int | None = _field(
+        None, "--bwd-chunks", parse=parse_opt_int, surfaces=("train", "sim"),
+        help="split the backward into K autodiff chunks and start each "
+             "bucket's exchange as its gradient is emitted ('none' = "
+             "monolithic backward; 1 = readiness path, bit-exact)")
+    microbatch: int | None = _field(
+        None, "--microbatch", parse=parse_opt_int, surfaces=("train", "tune"),
+        help="per-device rows per gradient-accumulation slice "
+             "(incompatible with --bwd-chunks)")
+    shape: str | None = _field(
+        None, "--shape", parse=parse_opt_str, surfaces=("sim",),
+        help="collective shape override: tree/ring/hier/ps, or 'none' = "
+             "per-method default (simulator-only — train refuses it)")
+    wire_dtype: str = _field(
+        "float32", "--wire-dtype", choices=tuple(WIRE_DTYPES),
+        surfaces=("train", "sim"),
+        help="sketch dtype on the wire (bfloat16 halves collective bytes)")
+    allreduce_mode: str = _field(
+        "psum", "--allreduce-mode", choices=("psum", "tree"),
+        surfaces=("train",),
+        help="sketch all-reduce: psum (TPU-native) | tree (faithful Alg. 1)")
+    sketch: SketchSpec = _field(factory=SketchSpec)
+
+    def validate(self) -> None:
+        from repro.core.compression import REGISTRY
+        if self.compressor not in REGISTRY and self.compressor != "none":
+            raise ValueError(
+                f"unknown compressor {self.compressor!r}; choose from "
+                f"{_compressor_choices()}")
+        for f in ("buckets", "bwd_chunks", "microbatch"):
+            v = getattr(self, f)
+            if v is not None and v < 1:
+                raise ValueError(f"{f} must be >= 1, got {v}")
+        if self.shape is not None and self.shape not in SHAPES:
+            raise ValueError(f"unknown collective shape {self.shape!r}; "
+                             f"choose from {SHAPES}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(f"unknown wire_dtype {self.wire_dtype!r}; "
+                             f"choose from {tuple(WIRE_DTYPES)}")
+        if self.wire_dtype != "float32" and self.compressor != "gs-sgd":
+            # only gs-sgd carries the knob end to end; accepting it here
+            # would let the simulator price byte savings training can't
+            # realize (the same silent mis-ranking shape= is refused for)
+            raise ValueError(
+                f"wire_dtype {self.wire_dtype!r} is only supported by the "
+                f"gs-sgd compressor, not {self.compressor!r}")
+        if self.allreduce_mode not in ("psum", "tree"):
+            raise ValueError(
+                f"unknown allreduce_mode {self.allreduce_mode!r}")
+        check_exchange_config(microbatch=self.microbatch,
+                              bwd_chunks=self.bwd_chunks)
+
+    def compressor_kw(self, d: int) -> dict:
+        """The ``compression.make`` kwargs this spec resolves to at flat
+        dimension ``d`` (geometry as plain ints; wire knobs only where the
+        compressor has them)."""
+        if self.compressor in ("dense", "none"):
+            return {}
+        sk = self.sketch.resolve(d)
+        kw: dict[str, Any] = {"k": sk.k, "rows": sk.rows, "width": sk.width,
+                              "seed": sk.seed}
+        if self.compressor == "gs-sgd":
+            import jax.numpy as jnp
+            kw["allreduce_mode"] = self.allreduce_mode
+            kw["wire_dtype"] = {"float32": jnp.float32,
+                                "bfloat16": jnp.bfloat16,
+                                "float16": jnp.float16}[self.wire_dtype]
+        return kw
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ExchangeSpec":
+        d = dict(d or {})  # an explicit null means "all defaults"
+        d["sketch"] = SketchSpec.from_json(d.get("sketch") or {})
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec — the cluster the run targets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Worker count, network topology/link regimes, heterogeneous slow
+    workers, the fault policy, and the per-step compute model.
+
+    ``link_alpha``/``link_beta`` are calibrated Eq. 1 overrides for the
+    (inter-group, on 'hier') link — ``None`` keeps the named preset; the
+    tuner's trace calibration writes them (no CLI flag on purpose).
+    """
+
+    p: int = _field(
+        4, "--workers", "--p", parse=int,
+        surfaces=("train", "sim", "tune"), dest="workers",
+        help="worker count (the data-parallel degree)")
+    topology: str = _field(
+        "flat", "--topology", choices=TOPOLOGIES, surfaces=("sim", "tune"),
+        help="network topology")
+    link: str = _field(
+        "1gbe", "--link", choices=LINKS, surfaces=("sim", "tune"),
+        help="(inter-group) link preset")
+    intra_link: str = _field(
+        "ici", "--intra-link", choices=LINKS, surfaces=("sim", "tune"),
+        help="intra-group link preset (hier topology)")
+    group_size: int = _field(
+        8, "--group-size", parse=int, surfaces=("sim", "tune"),
+        help="workers per group (hier topology)")
+    slow_workers: dict[int, float] = _field(
+        None, "--slow-workers", parse=parse_slow_workers, surfaces=("sim",),
+        metavar="ID:FACTOR,...", factory=dict,
+        help="heterogeneous per-worker link slowdowns, e.g. '3:10,7:2.5'")
+    heartbeat_timeout: float = _field(
+        1.0, "--heartbeat-timeout", parse=float, surfaces=("sim",),
+        help="seconds of heartbeat silence before a worker is dead")
+    drop_stragglers: bool = _field(
+        True, "--no-drop-stragglers", const=False, surfaces=("sim",),
+        dest="drop_stragglers",
+        help="disable the DeadlinePolicy straggler drop")
+    deadline_factor: float = _field(
+        3.0, "--deadline-factor", parse=float, surfaces=("sim",),
+        help="straggler deadline as a multiple of the median step")
+    max_drop_frac: float = _field(
+        0.25, "--max-drop-frac", parse=float, surfaces=("sim",),
+        help="max fraction of workers the straggler policy may drop")
+    rescale_lr: bool = True
+    compute_mean: float = _field(
+        0.1, "--compute-mean", parse=float, surfaces=("sim", "tune"),
+        help="mean seconds of fwd+bwd per step")
+    compute_jitter: float = _field(
+        0.08, "--compute-jitter", parse=float, surfaces=("sim",),
+        help="coefficient of variation of per-worker step times")
+    bwd_frac: float = _field(
+        2 / 3, "--bwd-frac", parse=float, surfaces=("sim", "tune"),
+        help="backward share of per-step compute (readiness clock)")
+    link_alpha: float | None = None
+    link_beta: float | None = None
+
+    def __post_init__(self):
+        # None (e.g. "slow_workers": null in a hand-authored spec JSON)
+        # means the same as an empty map
+        sw = self.slow_workers or {}
+        object.__setattr__(self, "slow_workers",
+                           {int(k): float(v) for k, v in sw.items()})
+
+    def validate(self) -> None:
+        if self.p < 1:
+            raise ValueError(f"p must be >= 1, got {self.p}")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {self.topology!r}; "
+                             f"choose from {TOPOLOGIES}")
+        for f in ("link", "intra_link"):
+            if getattr(self, f) not in LINKS:
+                raise ValueError(f"unknown {f} {getattr(self, f)!r}; "
+                                 f"choose from {LINKS}")
+        if self.group_size < 1:
+            raise ValueError(f"group_size must be >= 1, got "
+                             f"{self.group_size}")
+        for w, factor in self.slow_workers.items():
+            if factor <= 0:
+                raise ValueError(f"slow-worker factor for worker {w} must "
+                                 f"be > 0, got {factor}")
+
+    def link_spec(self):
+        """Eq. 1 LinkSpec for the (inter-group) link, calibrated overrides
+        applied over the named preset."""
+        from repro.sim.network import PRESETS, LinkSpec
+        base = PRESETS[self.link]
+        if self.link_alpha is None and self.link_beta is None:
+            return base
+        return LinkSpec(
+            alpha=base.alpha if self.link_alpha is None else self.link_alpha,
+            beta=base.beta if self.link_beta is None else self.link_beta)
+
+    def network(self):
+        """The modeled network, including calibration and slow workers —
+        what ``simulate(net=...)`` must receive so neither is lost."""
+        from repro.sim.network import make_network
+        return make_network(self.topology, link=self.link_spec(),
+                            group_size=self.group_size, intra=self.intra_link,
+                            slow_workers=self.slow_workers)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ClusterSpec":
+        # __post_init__ coerces slow_workers keys/None
+        return cls(**(d or {}))
+
+
+# ---------------------------------------------------------------------------
+# RunSpec — the whole run
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Everything one run needs, across every surface.
+
+    ``d`` is the flat gradient dimension for surfaces that never build the
+    model (sim/tune); ``None`` derives it from ``arch`` exactly as train
+    would see it (``resolve_d``). Driver-only knobs (log cadence, fault
+    traces, output paths, plan files) stay per-CLI — they are not run
+    configuration.
+    """
+
+    arch: str = _field(
+        "qwen3-4b", "--arch", choices=_arch_choices,
+        surfaces=("train", "sim", "tune", "serve"),
+        help="model architecture")
+    smoke: bool = _field(
+        False, "--smoke", const=True,
+        surfaces=("train", "sim", "tune", "serve"),
+        dest="smoke", help="use the reduced same-family config")
+    d: int | None = _field(
+        None, "--d", parse=parse_opt_int, surfaces=("sim", "tune"),
+        help="flat gradient dimension override ('none' = derive from "
+             "--arch)")
+    steps: int = _field(
+        50, "--steps", parse=int, surfaces=("train", "sim"),
+        help="training / simulated steps")
+    batch: int = _field(
+        8, "--batch", parse=int, surfaces=("train",), help="global batch")
+    seq: int = _field(
+        64, "--seq", parse=int, surfaces=("train",), help="sequence length")
+    lr: float = _field(
+        1e-3, "--lr", parse=float, surfaces=("train",), help="learning rate")
+    optimizer: str | None = _field(
+        None, "--optimizer", parse=parse_opt_str, surfaces=("train",),
+        help="optimizer name ('none' = per-arch default)")
+    seed: int = _field(
+        0, "--seed", parse=int, surfaces=("train", "sim", "tune", "serve"),
+        help="run seed (data stream, init, sim sampling, search)")
+    remat: bool = _field(
+        True, "--no-remat", const=False, surfaces=("train",), dest="remat",
+        help="disable sqrt-n remat in the cycle scan")
+    ckpt_dir: str | None = _field(
+        None, "--ckpt-dir", parse=parse_opt_str, surfaces=("train",),
+        help="checkpoint directory ('none' = no checkpoints)")
+    ckpt_every: int = _field(
+        20, "--ckpt-every", parse=int, surfaces=("train",),
+        help="checkpoint cadence in steps")
+    exchange: ExchangeSpec = _field(factory=ExchangeSpec)
+    cluster: ClusterSpec = _field(factory=ClusterSpec)
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self) -> None:
+        """Central config validation — train, sim, and tune all raise
+        through here, with identical messages."""
+        for f in ("steps", "batch", "seq", "ckpt_every"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1, got {getattr(self, f)}")
+        if self.d is not None and self.d < 1:
+            raise ValueError(f"d must be >= 1, got {self.d}")
+        self.exchange.validate()
+        self.cluster.validate()
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        return {"schema": SCHEMA, **d}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "RunSpec":
+        d = dict(d)
+        schema = d.pop("schema", SCHEMA)
+        if schema != SCHEMA:
+            raise ValueError(f"not a {SCHEMA} document: schema={schema!r}")
+        d["exchange"] = ExchangeSpec.from_json(d.get("exchange") or {})
+        d["cluster"] = ClusterSpec.from_json(d.get("cluster") or {})
+        return cls(**d)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "RunSpec":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    # -- surface conversions ------------------------------------------------
+
+    def arch_config(self):
+        from repro.configs import ARCHS, SMOKES
+        return (SMOKES if self.smoke else ARCHS)[self.arch]
+
+    def mesh_axes(self):
+        from repro.core.gs_sgd import MeshAxes
+        p = self.cluster.p
+        return MeshAxes(tp=1, data=p, tp_axis=None,
+                        data_axis="data" if p > 1 else None)
+
+    def resolve_d(self) -> int:
+        """Flat gradient dimension, exactly as train would see it."""
+        if self.d is not None:
+            return int(self.d)
+        from repro.core.gs_sgd import local_seg_shapes
+        from repro.models.flatten import make_flat_spec
+        shapes = local_seg_shapes(make_flat_spec(self.arch_config(), 1),
+                                  self.mesh_axes(), "dp")
+        return sum(math.prod(s) for s in shapes.values())
+
+    def make_optimizer(self):
+        from repro.configs import TRAIN_OVERRIDES
+        from repro.optim import make as make_opt
+        ov = TRAIN_OVERRIDES.get(self.arch_config().name, {})
+        return make_opt(self.optimizer or ov.get("optimizer", "adamw"),
+                        lr=self.lr)
+
+    def make_train_step(self, opt=None, dtype=None):
+        """Spec-first train-step construction (the CLI's build path)."""
+        import jax.numpy as jnp
+        from repro.core.gs_sgd import make_train_step
+        return make_train_step(
+            self.arch_config(), self.mesh_axes(),
+            opt if opt is not None else self.make_optimizer(),
+            dp_mode="dp", spec=self.exchange, remat=self.remat,
+            dtype=dtype if dtype is not None else jnp.float32)
+
+    def sim_config(self):
+        """``repro.sim.SimConfig`` with all-int geometry (rows/width/k
+        resolved through the one ``SketchSpec`` table — the simulator
+        never sees CLI strings)."""
+        from repro.sim.cluster import SimConfig
+        from repro.sim.workers import ComputeModel
+        ex, cl = self.exchange, self.cluster
+        method = "dense" if ex.compressor == "none" else ex.compressor
+        if method not in SIM_METHODS:
+            raise ValueError(
+                f"compressor {ex.compressor!r} is not replayable by the "
+                f"simulator; choose from {SIM_METHODS + ('none',)}")
+        d = self.resolve_d()
+        sk = ex.sketch.resolve(d)
+        return SimConfig(
+            p=cl.p, d=d, method=method, buckets=ex.buckets or 1,
+            steps=self.steps, k=sk.k, rows=sk.rows, width=sk.width,
+            shape=ex.shape, topology=cl.topology, link=cl.link,
+            intra_link=cl.intra_link, group_size=cl.group_size,
+            overlap=ex.overlap, bwd_chunks=ex.bwd_chunks or 1,
+            bwd_frac=cl.bwd_frac,
+            compute=ComputeModel(mean=cl.compute_mean,
+                                 jitter=cl.compute_jitter, seed=self.seed),
+            heartbeat_timeout=cl.heartbeat_timeout,
+            drop_stragglers=cl.drop_stragglers,
+            deadline_factor=cl.deadline_factor,
+            max_drop_frac=cl.max_drop_frac, rescale_lr=cl.rescale_lr,
+            slow_workers=dict(cl.slow_workers), seed=self.seed,
+            wire_dtype_bytes=WIRE_DTYPES[ex.wire_dtype])
+
+    def env(self):
+        """``repro.tune.Env`` — the tuner's fixed half — from this spec."""
+        from repro.tune.space import Env
+        cl = self.cluster
+        return Env(p=cl.p, d=self.resolve_d(), topology=cl.topology,
+                   link=cl.link, intra_link=cl.intra_link,
+                   group_size=cl.group_size, t_compute=cl.compute_mean,
+                   bwd_frac=cl.bwd_frac, microbatch=self.exchange.microbatch,
+                   link_alpha=cl.link_alpha, link_beta=cl.link_beta)
+
+    @classmethod
+    def from_env(cls, env) -> "RunSpec":
+        """The inverse of ``env()`` for plans tuned without a full spec
+        (e.g. programmatic ``search(space, env)`` calls): the cluster and
+        exchange constraints carry over; arch-level fields keep defaults."""
+        return cls(
+            d=int(env.d),
+            exchange=ExchangeSpec(microbatch=env.microbatch),
+            cluster=ClusterSpec(
+                p=int(env.p), topology=env.topology, link=env.link,
+                intra_link=env.intra_link, group_size=int(env.group_size),
+                compute_mean=float(env.t_compute),
+                bwd_frac=float(env.bwd_frac),
+                link_alpha=env.link_alpha, link_beta=env.link_beta))

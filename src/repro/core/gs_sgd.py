@@ -118,14 +118,14 @@ def validate_exchange_config(*, microbatch: int | None = None,
                              bwd_chunks: int | None = None) -> None:
     """Reject exchange configs the runtime cannot build.
 
-    The single source of the step-config constraints: ``make_train_step``
-    raises through this at build time, and ``repro.tune``'s searcher calls
-    the same function to SKIP the candidate instead of crashing mid-sweep.
+    The constraint itself lives in ``repro.api.spec.check_exchange_config``
+    — the spec layer's central validation — so ``make_train_step``, every
+    spec-driven CLI, and ``repro.tune``'s searcher (which SKIPs the
+    candidate instead of crashing mid-sweep) all reject the combo with the
+    identical message.
     """
-    if bwd_chunks is not None and microbatch is not None:
-        raise ValueError("bwd_chunks interleaves the exchange with ONE "
-                         "backward pass; combining it with microbatch "
-                         "accumulation is not supported")
+    from repro.api.spec import check_exchange_config
+    check_exchange_config(microbatch=microbatch, bwd_chunks=bwd_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +317,7 @@ def make_state(params: dict, opt: Optimizer, compressor, d_local: int,
 
 def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                     dp_mode: str = "dp",
+                    spec: Any | None = None,
                     compressor_name: str | None = "gs-sgd",
                     compressor_kw: dict | None = None,
                     remat: bool = True, dtype=jnp.bfloat16,
@@ -327,6 +328,13 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                     overlap: bool = True,
                     bwd_chunks: int | None = None) -> TrainStep:
     """Build the per-device train step (to be wrapped in shard_map/vmap).
+
+    spec: a ``repro.api.ExchangeSpec`` — the spec-first entry every CLI
+    uses. The compressor name, resolved sketch geometry (via the one
+    ``SketchSpec`` default table at this step's ``d_local``), bucket/
+    overlap/readiness schedule, microbatch, and wire knobs all come from
+    the spec; the legacy kwargs below are a thin shim over the same body
+    and must be left at their defaults when ``spec`` is passed.
 
     compressor_name=None or 'dense' -> dense psum baseline. In fsdp mode
     the compression axis is the pod axis only (grads arrive pre-reduced
@@ -364,6 +372,23 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     gathers = _gather_closures(ma, dp_mode, dtype)
     shapes = local_seg_shapes(fs, ma, dp_mode)
     d_local = sum(_math.prod(s) for s in shapes.values())
+    if spec is not None:
+        if (compressor_name != "gs-sgd" or compressor_kw is not None
+                or microbatch is not None or buckets is not None
+                or overlap is not True or bwd_chunks is not None):
+            raise ValueError("make_train_step: pass either spec= or the "
+                             "legacy exchange kwargs, not both")
+        spec.validate()
+        if spec.shape is not None:
+            raise ValueError(
+                f"collective shape {spec.shape!r} is a simulator-only "
+                "knob — the training step cannot apply it (set shape to "
+                "none, or use repro.launch.simulate)")
+        compressor_name = (None if spec.compressor == "none"
+                           else spec.compressor)
+        compressor_kw = spec.compressor_kw(d_local) or None
+        microbatch, buckets = spec.microbatch, spec.buckets
+        overlap, bwd_chunks = spec.overlap, spec.bwd_chunks
     validate_exchange_config(microbatch=microbatch, bwd_chunks=bwd_chunks)
 
     # In 'dp' the compressor sums raw per-worker grads over all dp axes; in

@@ -24,14 +24,21 @@ from repro.models.model import decode_fn, init_cache, prefill_fn
 
 
 def main(argv=None) -> dict:
+    from repro import api
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=list(ARCHS))
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    # --arch/--seed/--smoke(--no-smoke) come from the shared spec table;
+    # the serving base spec defaults to the smoke config (CPU demo)
+    api.add_spec_args(ap, "serve")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="serving batch (not the training global batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    raw = ap.parse_args(argv)
+    spec = api.apply_args(api.RunSpec(smoke=True), raw, "serve")
+    args = argparse.Namespace(arch=spec.arch, smoke=spec.smoke,
+                              seed=spec.seed, batch=raw.batch,
+                              prompt_len=raw.prompt_len, gen=raw.gen)
 
     cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
     ctx = ShardCtx(tp=1, tp_axis=None, dtype=jnp.float32)

@@ -1,9 +1,16 @@
-"""Cluster-simulation driver: topology-aware gs-SGD timelines at large P.
+"""Cluster-simulation driver — spec-first (``repro.api.RunSpec``).
 
 Runs ``repro.sim`` — the discrete-event simulator that replays the real
 ``reduce_schedule`` / bucketed-overlap pipeline on a modeled network — so
 elastic/straggler policies and the paper's communication claims can be
 evaluated at P=1024+ on a laptop in seconds.
+
+Config flags are GENERATED from the ``repro.api`` spec fields (the same
+declarations train and tune use, so defaults cannot drift); ``--spec``
+loads a full ``RunSpec`` as the base, ``--plan`` uses a tune plan's spec
+(tuned exchange + env topology/link + calibrated alpha/beta + compute
+mean), and explicitly-passed flags override either. The flat gradient
+dimension defaults to the spec arch's (``--d`` overrides it).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.simulate --p 1024 --method gs-sgd \
@@ -12,16 +19,20 @@ Examples:
       --group-size 32 --method gtopk --steps 50
   PYTHONPATH=src python -m repro.launch.simulate --p 512 --synthetic-faults \
       "fail_rate=0.05,rejoin_after=20" --out experiments/sim_512.json
+  PYTHONPATH=src python -m repro.launch.simulate --p 64 \
+      --slow-workers 3:10,7:2.5 --steps 20
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
-from repro.sim import (ComputeModel, FaultTrace, SimConfig, simulate,
-                       synthetic)
+from repro import api
+from repro.api import RunSpec
+from repro.sim import FaultTrace, simulate, synthetic
 
 
 def _parse_kv(spec: str) -> dict:
@@ -80,6 +91,7 @@ def curves_json(res) -> dict:
              "link": cfg.link, "shape": cfg.shape,
              "group_size": cfg.group_size, "overlap": cfg.overlap,
              "k": cfg.k, "rows": cfg.rows, "width": cfg.width,
+             "wire_dtype_bytes": cfg.wire_dtype_bytes,
              "seed": cfg.seed}
     curves = [{"method": cfg.method, "step": r.step, "p": r.p,
                "generation": r.generation, "bytes": r.bytes_critical,
@@ -94,70 +106,66 @@ def curves_json(res) -> dict:
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(
         description="discrete-event gs-SGD cluster simulator")
+    api.add_spec_args(ap, "sim")       # every config flag: repro.api.spec
+    ap.add_argument("--spec", default=None, metavar="SPEC.json",
+                    help="load a repro.api.RunSpec as the base config "
+                         "(explicit flags still override)")
+    ap.add_argument("--dump-spec", default=None, metavar="PATH",
+                    help="write the fully-resolved RunSpec JSON and "
+                         "continue")
     ap.add_argument("--plan", default=None, metavar="PLAN.json",
-                    help="apply a repro.launch.tune plan: tuned exchange "
-                         "config (method/buckets/bwd-chunks/k/rows/width/"
-                         "shape) plus the plan env's topology/link regime; "
-                         "--p/--d default to the plan's env, and the "
-                         "remaining CLI flags (steps, faults, compute "
+                    help="use a repro.launch.tune plan's spec as the base: "
+                         "tuned exchange config plus the plan env's "
+                         "topology/link regime and calibrated alpha/beta; "
+                         "the remaining CLI flags (steps, faults, compute "
                          "jitter, ...) still apply")
-    ap.add_argument("--p", type=int, default=None,
-                    help="initial worker count (default 64, or the plan's)")
-    ap.add_argument("--d", type=int, default=None,
-                    help="flat gradient dimension (default: VGG-16 scale, "
-                         "or the plan's)")
-    ap.add_argument("--method", default="gs-sgd",
-                    choices=["gs-sgd", "gtopk", "sketched-sgd", "dense"])
-    ap.add_argument("--buckets", type=int, default=1)
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--k", type=int, default=None)
-    ap.add_argument("--rows", default="5",
-                    help="sketch rows: int, or 'log' for O(log d) depth")
-    ap.add_argument("--width", type=int, default=None)
-    ap.add_argument("--shape", default=None,
-                    choices=[None, "tree", "ring", "hier", "ps"],
-                    help="collective shape override (default per method)")
-    ap.add_argument("--topology", default="flat", choices=["flat", "hier"])
-    ap.add_argument("--link", default="1gbe",
-                    choices=["1gbe", "10gbe", "ici"])
-    ap.add_argument("--group-size", type=int, default=8)
-    ap.add_argument("--no-overlap", action="store_true")
-    ap.add_argument("--bwd-chunks", type=int, default=1,
-                    help="backward-interleaved readiness chunks: buckets "
-                         "start their exchange as the backward scan emits "
-                         "them (1 = post-accumulation pipeline)")
-    ap.add_argument("--bwd-frac", type=float, default=2 / 3,
-                    help="backward share of per-step compute (readiness "
-                         "clock for --bwd-chunks > 1)")
-    ap.add_argument("--compute-mean", type=float, default=None,
-                    help="mean seconds of fwd+bwd per step (default 0.1, "
-                         "or the plan env's possibly-calibrated t_compute)")
-    ap.add_argument("--compute-jitter", type=float, default=0.08)
-    ap.add_argument("--heartbeat-timeout", type=float, default=1.0)
-    ap.add_argument("--no-drop-stragglers", action="store_true")
-    ap.add_argument("--deadline-factor", type=float, default=3.0)
     ap.add_argument("--fault-trace", default=None,
                     help="path to a JSON fault trace (see sim/traces.py)")
     ap.add_argument("--synthetic-faults", default=None, metavar="KV",
                     help="generate a seeded trace, e.g. "
                          "'fail_rate=0.05,straggle_rate=0.1,rejoin_after=20'")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write full JSON result here")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable curves JSON (same shape "
                          "as benchmarks/comm_complexity.py: model/curves/"
                          "checks) for CI diffing")
     args = ap.parse_args(argv)
+    if args.spec and args.plan:
+        ap.error("--spec and --plan both name a base spec; pass one")
 
     plan = None
     if args.plan:
         from repro.tune import TunePlan
         plan = TunePlan.load(args.plan)
-    p = args.p if args.p is not None else (plan.env.p if plan else 64)
-    d = args.d if args.d is not None else (plan.env.d if plan
-                                           else 15_000_000)
-    compute_mean = args.compute_mean if args.compute_mean is not None else \
-        (plan.env.t_compute if plan else 0.1)
+        base = plan.spec
+    elif args.spec:
+        base = RunSpec.load(args.spec)
+    else:
+        base = RunSpec()
+    spec = api.apply_args(base, args, "sim")
+    spec.validate()
+    if spec.d is None:
+        # make the arch-derived flat dimension visible (e.g. the full,
+        # non-smoke default arch is ~4e9 coordinates)
+        spec = dataclasses.replace(spec, d=spec.resolve_d())
+        print(f"arch {spec.arch}{' (smoke)' if spec.smoke else ''}: "
+              f"d = {spec.d}")
+    if args.dump_spec:
+        spec.save(args.dump_spec)
+        print(f"wrote resolved spec to {args.dump_spec}")
+
+    if plan is not None:
+        cl = spec.cluster
+        cal = (f" [calibrated a={cl.link_spec().alpha:.2e} "
+               f"b={cl.link_spec().beta:.2e}]"
+               if cl.link_alpha is not None or cl.link_beta is not None
+               else "")
+        print(f"plan {args.plan}: {plan.choice.label()} on "
+              f"{cl.topology}/{cl.link}{cal} (predicted step "
+              f"{plan.predicted['step_time'] * 1e3:.2f}ms)")
+
+    cfg = spec.sim_config()
+    p = cfg.p
 
     trace = FaultTrace()
     if args.fault_trace:
@@ -165,38 +173,13 @@ def main(argv=None) -> dict:
     elif args.synthetic_faults is not None:
         kv = _parse_kv(args.synthetic_faults)
         rejoin = kv.pop("rejoin_after", None)
-        trace = synthetic(p, args.steps, seed=args.seed,
+        trace = synthetic(p, spec.steps, seed=spec.seed,
                           rejoin_after=int(rejoin) if rejoin else None,
                           **{k: float(v) for k, v in kv.items()})
 
-    rows: int | str = args.rows if args.rows == "log" else int(args.rows)
-    kw = dict(
-        d=d, method=args.method, buckets=args.buckets,
-        k=args.k, rows=rows, width=args.width,
-        shape=args.shape, topology=args.topology, link=args.link,
-        group_size=args.group_size,
-        bwd_chunks=args.bwd_chunks, bwd_frac=args.bwd_frac)
-    net = None
-    if plan is not None:
-        kw.update(plan.sim_kw())
-        kw["d"] = d  # an explicit --d still wins over the plan env's
-        # the env's network carries any CALIBRATED alpha/beta (the preset
-        # name in SimConfig.link alone would silently lose them)
-        net = plan.env.network()
-        spec = plan.env.link_spec()
-        cal = (f" [calibrated a={spec.alpha:.2e} b={spec.beta:.2e}]"
-               if plan.env.link_alpha is not None
-               or plan.env.link_beta is not None else "")
-        print(f"plan {args.plan}: {plan.choice.label()} on "
-              f"{kw['topology']}/{kw['link']}{cal} (predicted step "
-              f"{plan.predicted['step_time'] * 1e3:.2f}ms)")
-    cfg = SimConfig(
-        p=p, steps=args.steps, overlap=not args.no_overlap,
-        compute=ComputeModel(mean=compute_mean,
-                             jitter=args.compute_jitter, seed=args.seed),
-        heartbeat_timeout=args.heartbeat_timeout,
-        drop_stragglers=not args.no_drop_stragglers,
-        deadline_factor=args.deadline_factor, seed=args.seed, **kw)
+    # the spec's network carries calibrated alpha/beta AND slow workers —
+    # SimConfig's preset name alone would silently lose the calibration
+    net = spec.cluster.network()
 
     t0 = time.time()
     res = simulate(cfg, trace, net=net)

@@ -1,4 +1,12 @@
-"""Training driver.
+"""Training driver — spec-first (``repro.api.RunSpec``).
+
+The entire run configuration is one typed ``RunSpec``: the argparse block
+is GENERATED from the spec fields (one declaration → flag name, type,
+default, help — see DESIGN.md §9), ``--spec SPEC.json`` loads a full spec
+as the base, and explicitly-passed flags override it. ``--auto-tune``
+merges a ``repro.launch.tune`` plan's exchange config into the base spec
+through the same path the manual flags take — pinned bit-exact against
+passing ``plan.train_argv()`` by hand.
 
 Two execution modes:
 
@@ -17,49 +25,39 @@ number); --kill-at simulates a mid-run crash for the restart tests.
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
       --workers 4 --steps 50 --compressor gs-sgd
+  PYTHONPATH=src python -m repro.launch.train --spec examples/specs/qwen3_smoke.json
   PYTHONPATH=src python -m repro.launch.train --resume ...
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import api
 from repro import ckpt as ckpt_lib
-from repro.configs import ARCHS, SMOKES, TRAIN_OVERRIDES
-from repro.core.gs_sgd import MeshAxes, make_state, make_train_step
+from repro.api import RunSpec
+from repro.core.gs_sgd import make_state
 from repro.data import LMStream
 from repro.models.flatten import init_flat_params
-from repro.optim import make as make_opt
 
 
-def build(args):
-    cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
-    ov = TRAIN_OVERRIDES.get(cfg.name, {})
-    opt = make_opt(args.optimizer or ov.get("optimizer", "adamw"),
-                   lr=args.lr)
-    P = args.workers
-    ma = MeshAxes(tp=1, data=P, tp_axis=None,
-                  data_axis="data" if P > 1 else None)
-    ckw = dict(k=args.k, rows=args.rows, width=args.width)
-    if args.compressor in ("dense", "none"):
-        ckw = {}
-    ts = make_train_step(
-        cfg, ma, opt, dp_mode="dp",
-        compressor_name=None if args.compressor == "none" else args.compressor,
-        compressor_kw=ckw or None, remat=not args.no_remat,
-        dtype=jnp.float32, microbatch=args.microbatch,
-        buckets=args.buckets, overlap=not args.no_overlap,
-        bwd_chunks=args.bwd_chunks)
+def build(spec: RunSpec):
+    """cfg/opt/ma/TrainStep from the spec — the one construction path."""
+    cfg = spec.arch_config()
+    opt = spec.make_optimizer()
+    ma = spec.mesh_axes()
+    ts = spec.make_train_step(opt=opt, dtype=jnp.float32)
     if ts.n_buckets > 1:
         sizes = ts.compressor.spec.sizes
         print(f"bucketed exchange: {ts.n_buckets} buckets "
-              f"(sizes {list(sizes)}), overlap={'off' if args.no_overlap else 'on'}")
+              f"(sizes {list(sizes)}), "
+              f"overlap={'on' if spec.exchange.overlap else 'off'}")
     if ts.bwd_chunks:
         ready = list(ts.plan.readiness) if ts.plan is not None else None
         print(f"backward-interleaved readiness: {ts.bwd_chunks} chunk(s), "
@@ -67,67 +65,65 @@ def build(args):
     return cfg, opt, ma, ts
 
 
+def resolve_spec(args) -> RunSpec:
+    """base (--spec file or defaults) <- --auto-tune exchange <- CLI flags."""
+    base = RunSpec.load(args.spec) if args.spec else RunSpec()
+    if args.auto_tune:
+        from repro.tune import TunePlan
+        plan = TunePlan.load(args.auto_tune)
+        base = dataclasses.replace(
+            base, exchange=plan.train_exchange(base.exchange))
+        print(f"auto-tune {args.auto_tune}: " + " ".join(plan.train_argv()))
+    spec = api.apply_args(base, args, "train")
+    if args.auto_tune:
+        # only the fields train_exchange() actually merges are "tuned" —
+        # flags like --microbatch never shadow the plan
+        shadowed = [f for f in ("compressor", "buckets", "bwd_chunks",
+                                "sketch")
+                    if getattr(spec.exchange, f)
+                    != getattr(base.exchange, f)]
+        if shadowed:
+            print("note: explicit flags override the plan's exchange "
+                  "config: " + ", ".join(shadowed))
+    spec.validate()
+    return spec
+
+
 def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=list(ARCHS))
-    ap.add_argument("--smoke", action="store_true",
-                    help="use the reduced same-family config")
-    ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=50)
-    ap.add_argument("--batch", type=int, default=8, help="global batch")
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--optimizer", default=None)
-    ap.add_argument("--compressor", default="gs-sgd",
-                    choices=["gs-sgd", "sketched-sgd", "gtopk", "topk",
-                             "dense", "none"])
-    ap.add_argument("--k", type=int, default=2048)
-    ap.add_argument("--rows", type=int, default=5)
-    ap.add_argument("--width", type=int, default=4096)
-    ap.add_argument("--microbatch", type=int, default=None)
-    ap.add_argument("--buckets", type=int, default=None,
-                    help="bucketed gradient exchange: ~N buckets split at "
-                         "FlatSpec segment boundaries (None = monolithic)")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="disable the pipelined bucket schedule "
-                         "(sequential per-bucket exchange)")
-    ap.add_argument("--bwd-chunks", type=int, default=None,
-                    help="split the backward scan into K autodiff chunks "
-                         "and start each bucket's exchange as its gradient "
-                         "is emitted (None = monolithic backward; 1 = "
-                         "readiness path, bit-exact vs monolithic)")
+    ap = argparse.ArgumentParser(description="gs-SGD training driver")
+    api.add_spec_args(ap, "train")     # every config flag: repro.api.spec
+    ap.add_argument("--spec", default=None, metavar="SPEC.json",
+                    help="load a repro.api.RunSpec as the base config "
+                         "(explicit flags still override)")
+    ap.add_argument("--dump-spec", default=None, metavar="PATH",
+                    help="write the fully-resolved RunSpec JSON and "
+                         "continue (CI asserts train/simulate/tune "
+                         "resolve a shared spec identically)")
     ap.add_argument("--auto-tune", default=None, metavar="PLAN.json",
-                    help="resolve compressor/buckets/bwd-chunks/k/rows/"
-                         "width from a repro.launch.tune plan (applied "
-                         "through the same flags — bit-exact vs passing "
-                         "them manually)")
+                    help="merge a repro.launch.tune plan's exchange config "
+                         "into the base spec (bit-exact vs passing the "
+                         "same flags manually)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a repro.tune/trace@1 calibration trace: "
                          "per-step wall time + CommStats (rounds/bytes), "
                          "consumable by repro.launch.tune --calibrate")
-    ap.add_argument("--no-remat", action="store_true")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--kill-at", type=int, default=None,
                     help="simulate a crash after this step (tests)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
-    if args.auto_tune:
-        from repro.tune import TunePlan
-        plan = TunePlan.load(args.auto_tune)
-        for field, val in plan.train_args().items():
-            setattr(args, field, val)
-        print(f"auto-tune {args.auto_tune}: " + " ".join(plan.train_argv()))
+    spec = resolve_spec(args)
+    if args.dump_spec:
+        spec.save(args.dump_spec)
+        print(f"wrote resolved spec to {args.dump_spec}")
 
-    cfg, opt, ma, ts = build(args)
-    P = args.workers
-    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                      global_batch=args.batch, seed=args.seed)
+    cfg, opt, ma, ts = build(spec)
+    P = spec.cluster.p
+    stream = LMStream(vocab_size=cfg.vocab_size, seq_len=spec.seq,
+                      global_batch=spec.batch, seed=spec.seed)
 
-    params = init_flat_params(cfg, jax.random.PRNGKey(args.seed), 1, ts.fs)
+    params = init_flat_params(cfg, jax.random.PRNGKey(spec.seed), 1, ts.fs)
     state = make_state(params, opt, ts.compressor, ts.d_local)
     if P > 1:
         state = jax.tree_util.tree_map(
@@ -138,10 +134,10 @@ def main(argv=None) -> dict:
 
     start = 0
     saver = None
-    if args.ckpt_dir:
-        saver = ckpt_lib.AsyncCheckpointer(args.ckpt_dir, keep=3)
-        if args.resume and ckpt_lib.latest_step(args.ckpt_dir) is not None:
-            state, meta = ckpt_lib.restore(args.ckpt_dir, state)
+    if spec.ckpt_dir:
+        saver = ckpt_lib.AsyncCheckpointer(spec.ckpt_dir, keep=3)
+        if args.resume and ckpt_lib.latest_step(spec.ckpt_dir) is not None:
+            state, meta = ckpt_lib.restore(spec.ckpt_dir, state)
             state = jax.tree_util.tree_map(jnp.asarray, state)
             start = meta["step"]
             print(f"resumed from step {start}")
@@ -158,14 +154,16 @@ def main(argv=None) -> dict:
         calibration capture path (repro.launch.tune --calibrate)."""
         if not args.json:
             return
+        ex = spec.exchange
+        sk = ex.sketch.resolve(ts.d_local)
         doc = {"schema": "repro.tune/trace@1",
                "model": {"arch": cfg.name, "p": P, "d": ts.d_local,
-                         "compressor": args.compressor,
-                         "buckets": args.buckets,
-                         "bwd_chunks": args.bwd_chunks,
-                         "overlap": not args.no_overlap,
-                         "k": args.k, "rows": args.rows,
-                         "width": args.width, "seed": args.seed,
+                         "compressor": ex.compressor,
+                         "buckets": ex.buckets,
+                         "bwd_chunks": ex.bwd_chunks,
+                         "overlap": ex.overlap,
+                         "k": sk.k, "rows": sk.rows,
+                         "width": sk.width, "seed": spec.seed,
                          "bytes_per_step": stats.bytes_out,
                          "rounds_per_step": stats.rounds},
                "records": records}
@@ -174,11 +172,11 @@ def main(argv=None) -> dict:
         print(f"wrote {args.json} ({len(records)} records)")
 
     t0 = time.time()
-    for step in range(start, args.steps):
+    for step in range(start, spec.steps):
         gb = stream.global_batch_at(step)
         if P > 1:
             batch = jax.tree_util.tree_map(
-                lambda a: a.reshape((P, args.batch // P) + a.shape[1:]), gb)
+                lambda a: a.reshape((P, spec.batch // P) + a.shape[1:]), gb)
         else:
             batch = gb
         t_step0 = time.time()
@@ -189,10 +187,10 @@ def main(argv=None) -> dict:
             records.append({"step": step, "t_step": time.time() - t_step0,
                             "loss": loss, "rounds": stats.rounds,
                             "bytes": stats.bytes_out})
-        if step % args.log_every == 0 or step == args.steps - 1:
+        if step % args.log_every == 0 or step == spec.steps - 1:
             print(f"step {step:5d}  loss {loss:.4f}  "
                   f"({(time.time() - t0):.1f}s)")
-        if saver and (step + 1) % args.ckpt_every == 0:
+        if saver and (step + 1) % spec.ckpt_every == 0:
             saver.save(step + 1, state, {"loss": loss})
         if args.kill_at is not None and step + 1 >= args.kill_at:
             print(f"simulated crash at step {step + 1}")
@@ -201,7 +199,7 @@ def main(argv=None) -> dict:
             dump_trace()
             return {"history": history, "crashed_at": step + 1}
     if saver:
-        saver.save(args.steps, state, {"loss": history[-1]})
+        saver.save(spec.steps, state, {"loss": history[-1]})
         saver.wait()
     dump_trace()
     out = {"history": history, "final_loss": history[-1]}

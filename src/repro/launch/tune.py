@@ -1,10 +1,15 @@
-"""Auto-tuner driver: search the exchange-config space, emit a TunePlan.
+"""Auto-tuner driver — spec-first (``repro.api.RunSpec``).
 
 Searches (buckets, bwd_chunks, rows, width, top-k fraction, collective)
 by replaying every candidate through the REAL ``repro.sim`` pricing on the
 target environment, optionally anchored to hardware with ``--calibrate``
 (a measured step-time trace from ``train --json`` or ``simulate --json``).
-The winning plan is a JSON document the other launchers apply directly:
+
+The environment half (arch/d, workers, topology, links, compute) is a
+``RunSpec`` built from the same generated flags train and simulate use
+(``--spec`` loads one as the base); the searched half stays the explicit
+grid axes below. The winning plan serializes the tuned ``RunSpec`` and is
+applied by the other launchers directly:
 
     repro.launch.train    --auto-tune PLAN.json
     repro.launch.simulate --plan PLAN.json
@@ -19,22 +24,18 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import math
+import dataclasses
 import time
 
-from repro.tune import Env, SearchSpace, TunePlan, fit, load_trace, search
+from repro import api
+from repro.api import RunSpec
+from repro.tune import SearchSpace, TunePlan, fit, load_trace, search
 
 
 def _arch_d(arch: str, smoke: bool, p: int) -> int:
     """Flat gradient dimension of an arch exactly as train would see it."""
-    from repro.configs import ARCHS, SMOKES
-    from repro.core.gs_sgd import MeshAxes, local_seg_shapes
-    from repro.models.flatten import make_flat_spec
-    cfg = (SMOKES if smoke else ARCHS)[arch]
-    ma = MeshAxes(tp=1, data=p, tp_axis=None,
-                  data_axis="data" if p > 1 else None)
-    shapes = local_seg_shapes(make_flat_spec(cfg, 1), ma, "dp")
-    return sum(math.prod(s) for s in shapes.values())
+    return RunSpec(arch=arch, smoke=smoke,
+                   cluster=api.ClusterSpec(p=p)).resolve_d()
 
 
 def _rows(vals) -> tuple:
@@ -56,27 +57,13 @@ def _opt_str(vals) -> tuple:
 def main(argv=None) -> TunePlan:
     ap = argparse.ArgumentParser(
         description="sim-driven auto-tuner for the gs-SGD exchange pipeline")
-    # environment
-    ap.add_argument("--p", type=int, default=64, help="worker count")
-    ap.add_argument("--d", type=int, default=None,
-                    help="flat gradient dimension (or use --arch)")
-    ap.add_argument("--arch", default=None,
-                    help="derive d from this arch's flat spec")
-    ap.add_argument("--smoke", action="store_true",
-                    help="with --arch: the reduced same-family config")
-    ap.add_argument("--topology", default="flat", choices=["flat", "hier"])
-    ap.add_argument("--link", default="1gbe",
-                    choices=["1gbe", "10gbe", "ici"])
-    ap.add_argument("--intra-link", default="ici",
-                    choices=["1gbe", "10gbe", "ici"])
-    ap.add_argument("--group-size", type=int, default=8)
-    ap.add_argument("--compute-mean", type=float, default=0.1,
-                    help="seconds of fwd+bwd per step (overridden by "
-                         "--calibrate)")
-    ap.add_argument("--bwd-frac", type=float, default=2 / 3)
-    ap.add_argument("--microbatch", type=int, default=None,
-                    help="planned runtime accumulation (constrains the "
-                         "space: bwd_chunks>1 candidates are skipped)")
+    # environment: generated from the spec fields (shared with train/sim)
+    api.add_spec_args(ap, "tune")
+    ap.add_argument("--spec", default=None, metavar="SPEC.json",
+                    help="load a repro.api.RunSpec as the base environment "
+                         "(explicit flags still override)")
+    ap.add_argument("--dump-spec", default=None, metavar="PATH",
+                    help="write the resolved base RunSpec JSON and continue")
     # search space
     ap.add_argument("--methods", nargs="+", default=["gs-sgd"])
     ap.add_argument("--buckets", type=int, nargs="+", default=[1, 2, 4, 8])
@@ -97,7 +84,6 @@ def main(argv=None) -> TunePlan:
                     help="alternatives kept in the plan")
     ap.add_argument("--budget", type=int, default=None,
                     help="max candidates to evaluate (seeded subsample)")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-error-probe", action="store_true",
                     help="skip the count-sketch fidelity probe (rank on "
                          "time only)")
@@ -114,25 +100,28 @@ def main(argv=None) -> TunePlan:
     ap.add_argument("--out", default=None, metavar="PLAN.json")
     args = ap.parse_args(argv)
 
-    if args.d is None:
-        if args.arch is None:
-            ap.error("one of --d or --arch is required")
-        args.d = _arch_d(args.arch, args.smoke, args.p)
-        print(f"arch {args.arch}{' (smoke)' if args.smoke else ''}: "
-              f"d = {args.d}")
-
-    env = Env(p=args.p, d=args.d, topology=args.topology, link=args.link,
-              intra_link=args.intra_link, group_size=args.group_size,
-              t_compute=args.compute_mean, bwd_frac=args.bwd_frac,
-              microbatch=args.microbatch)
+    base = RunSpec.load(args.spec) if args.spec else RunSpec()
+    spec = api.apply_args(base, args, "tune")
+    spec.validate()
+    if spec.d is None:
+        spec = dataclasses.replace(spec, d=spec.resolve_d())
+        print(f"arch {spec.arch}{' (smoke)' if spec.smoke else ''}: "
+              f"d = {spec.d}")
     if args.calibrate:
         cal = fit([load_trace(p) for p in args.calibrate])
-        env = cal.apply(env)
+        spec = dataclasses.replace(
+            spec, cluster=dataclasses.replace(
+                spec.cluster, compute_mean=cal.t_compute,
+                link_alpha=cal.alpha, link_beta=cal.beta))
         print(f"calibrated from {', '.join(args.calibrate)}: "
               f"alpha={cal.alpha:.3e}s "
               f"beta={cal.beta:.3e}s/B t_compute={cal.t_compute:.4f}s "
               f"(rms residual {cal.residual:.2e}s over {cal.n_records} "
               f"records)")
+    if args.dump_spec:
+        spec.save(args.dump_spec)
+        print(f"wrote resolved spec to {args.dump_spec}")
+    env = spec.env()
 
     space = SearchSpace(methods=tuple(args.methods),
                         buckets=tuple(args.buckets),
@@ -142,8 +131,9 @@ def main(argv=None) -> TunePlan:
                         shapes=_opt_str(args.shapes))
     t0 = time.time()
     plan = search(space, env, top=args.top, budget=args.budget,
-                  seed=args.seed, error_probe=not args.no_error_probe,
-                  probe_d=args.probe_d, max_error=args.max_error)
+                  seed=spec.seed, error_probe=not args.no_error_probe,
+                  probe_d=args.probe_d, max_error=args.max_error,
+                  spec=spec)
     wall = time.time() - t0
 
     pv = plan.provenance

@@ -60,6 +60,7 @@ class SimConfig:
     rows: int | str = 5
     width: int | None = None
     shape: str | None = None          # collective shape (None = per-method)
+    wire_dtype_bytes: int = 4         # sketch wire bytes/elt (bf16 = 2)
     topology: str = "flat"            # 'flat' | 'hier' network
     link: str = "1gbe"
     intra_link: str = "ici"
@@ -148,7 +149,8 @@ def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
                               slow_workers=cfg.slow_workers)
     rep = ExchangeReplay(cfg.method, cfg.d, buckets=cfg.buckets, k=cfg.k,
                          rows=cfg.rows, width=cfg.width, shape=cfg.shape,
-                         group_size=cfg.group_size)
+                         group_size=cfg.group_size,
+                         wire_dtype_bytes=cfg.wire_dtype_bytes)
     compute = (cfg.compute if cfg.compute.seed is not None
                else dataclasses.replace(cfg.compute, seed=cfg.seed))
     loop = EventLoop()

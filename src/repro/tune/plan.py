@@ -1,21 +1,27 @@
 """``TunePlan`` — the serializable decision the tuner hands the launchers.
 
-A plan is a JSON document: the env it was tuned for, the chosen candidate
-with its RESOLVED geometry (k/rows/width as plain ints, after
+A plan is a JSON document built around ONE ``repro.api.RunSpec``: the
+tuned run configuration itself (cluster env + the chosen exchange config
+with RESOLVED geometry — k/rows/width as plain ints, after
 ``default_geometry`` defaults — so applying a plan never re-derives
-anything), the predicted economics, the ranked runners-up, what the
-searcher skipped and why, and provenance (space + seed) sufficient to
-reproduce the search bit-for-bit.
+anything), plus the searched ``Candidate``, the predicted economics, the
+ranked runners-up, what the searcher skipped and why, and provenance
+(space + seed) sufficient to reproduce the search bit-for-bit.
 
-Application goes through the launchers' existing paths only:
+Application is the spec layer's single path:
 
-* ``train_args()``/``train_argv()`` map the choice onto the exact
-  ``repro.launch.train`` flags — ``--auto-tune PLAN.json`` is therefore
-  pinned bit-exact against the same flags passed manually (the plan never
-  touches ``make_train_step`` except through the CLI's own argument
-  plumbing).
-* ``sim_kw()`` maps choice + env onto ``SimConfig`` fields for
-  ``repro.launch.simulate --plan``.
+* ``repro.launch.train --auto-tune PLAN.json`` merges
+  ``plan.train_exchange()`` into its base spec — the very fields the
+  manual CLI flags would set, so it is pinned bit-exact against passing
+  ``plan.train_argv()`` by hand.
+* ``repro.launch.simulate --plan PLAN.json`` uses ``plan.spec`` as its
+  base spec: ``spec.sim_config()`` + ``spec.cluster.network()`` carry the
+  tuned exchange, the env's topology/link regime, AND any calibrated
+  alpha/beta (which a preset name alone would silently lose).
+
+Schema v2 (``repro.tune/plan@2``). v1 documents — which stored a tuner
+``Env`` instead of a spec — still load through a shim, so pre-redesign
+plans keep working with ``--auto-tune`` unchanged.
 """
 
 from __future__ import annotations
@@ -23,19 +29,21 @@ from __future__ import annotations
 import dataclasses
 import json
 
+from repro.api import ExchangeSpec, RunSpec
 from repro.tune.space import Candidate, Env, SearchSpace
 
-VERSION = 1
-SCHEMA = "repro.tune/plan@1"
+VERSION = 2
+SCHEMA = "repro.tune/plan@2"
+SCHEMA_V1 = "repro.tune/plan@1"
 
 
 @dataclasses.dataclass(frozen=True)
 class TunePlan:
-    env: Env
-    choice: Candidate
+    spec: RunSpec                  # the tuned run: env + resolved exchange
+    choice: Candidate              # the searched delta that produced it
     geometry: dict                 # resolved ints: k, rows, width (+ buckets)
     predicted: dict                # CandidateCost.to_json() of the choice
-    alternatives: list             # ranked top-N [{candidate, cost}]
+    alternatives: list             # ranked top-N [{candidate, cost, geometry}]
     skipped: list                  # [{candidate, reason}] from enumeration
     provenance: dict               # {seed, space, n_valid, n_evaluated, ...}
 
@@ -44,7 +52,7 @@ class TunePlan:
     def to_json(self) -> dict:
         return {
             "schema": SCHEMA, "version": VERSION,
-            "env": self.env.to_json(), "choice": self.choice.to_json(),
+            "spec": self.spec.to_json(), "choice": self.choice.to_json(),
             "geometry": dict(self.geometry), "predicted": dict(self.predicted),
             "alternatives": list(self.alternatives),
             "skipped": list(self.skipped),
@@ -53,11 +61,23 @@ class TunePlan:
 
     @classmethod
     def from_json(cls, d: dict) -> "TunePlan":
-        if d.get("schema") != SCHEMA:
-            raise ValueError(f"not a {SCHEMA} document: "
-                             f"schema={d.get('schema')!r}")
-        return cls(env=Env.from_json(d["env"]),
-                   choice=Candidate.from_json(d["choice"]),
+        schema = d.get("schema")
+        if schema in (SCHEMA, SCHEMA_V1) and "choice" not in d:
+            raise ValueError(f"plan document (schema {schema!r}) is "
+                             "missing its 'choice'")
+        choice = Candidate.from_json(d["choice"]) if "choice" in d else None
+        if schema == SCHEMA:
+            spec = RunSpec.from_json(d["spec"])
+        elif schema == SCHEMA_V1:
+            # pre-redesign plans stored a tuner Env + choice + geometry;
+            # rebuild the equivalent RunSpec so application is identical
+            env = Env.from_json(d["env"])
+            spec = choice.apply(RunSpec.from_env(env),
+                                geometry=d["geometry"])
+        else:
+            raise ValueError(f"not a {SCHEMA} (or {SCHEMA_V1}) document: "
+                             f"schema={schema!r}")
+        return cls(spec=spec, choice=choice,
                    geometry=d["geometry"], predicted=d["predicted"],
                    alternatives=d["alternatives"], skipped=d["skipped"],
                    provenance=d["provenance"])
@@ -73,15 +93,20 @@ class TunePlan:
 
     # -- application --------------------------------------------------------
 
-    def train_args(self) -> dict:
-        """The ``repro.launch.train`` argument values this plan resolves to.
+    @property
+    def env(self) -> Env:
+        """The tuner-facing view of the plan's cluster half (derived)."""
+        return self.spec.env()
 
-        ``bwd_chunks=1`` maps to ``None`` (monolithic backward): the
-        readiness path at one chunk is pinned bit-exact against it, and
-        ``None`` keeps plans applicable to microbatched runs.
+    def train_exchange(self, base: ExchangeSpec | None = None
+                       ) -> ExchangeSpec:
+        """The tuned exchange config merged over ``base`` — exactly the
+        fields the manual train flags would set (compressor, buckets,
+        bwd_chunks, resolved sketch), leaving driver-side knobs (overlap,
+        microbatch, wire) to the caller's own spec.
 
         A tuned collective ``shape`` is a simulator-level knob with no
-        training-CLI equivalent — applying such a plan to training would
+        training equivalent — applying such a plan to training would
         silently run economics the plan does not predict, so it is
         refused loudly instead (re-tune with ``shapes=(None,)`` for a
         trainable plan; ``simulate --plan`` applies the shape fine).
@@ -92,46 +117,23 @@ class TunePlan:
                 " which repro.launch.train cannot apply — re-tune with "
                 "shapes=(None,) for a trainable plan, or use "
                 "simulate --plan")
-        return {
-            "compressor": self.choice.method,
-            "buckets": int(self.choice.buckets),
-            "bwd_chunks": (int(self.choice.bwd_chunks)
-                           if self.choice.bwd_chunks > 1 else None),
-            "k": int(self.geometry["k"]),
-            "rows": int(self.geometry["rows"]),
-            "width": int(self.geometry["width"]),
-        }
+        ex = self.spec.exchange
+        return dataclasses.replace(
+            base if base is not None else ExchangeSpec(),
+            compressor=ex.compressor, buckets=ex.buckets,
+            bwd_chunks=ex.bwd_chunks, sketch=ex.sketch)
 
     def train_argv(self) -> list[str]:
         """The equivalent manual CLI flags (the bit-exactness pin's RHS)."""
-        ta = self.train_args()
-        argv = ["--compressor", ta["compressor"],
-                "--buckets", str(ta["buckets"]),
-                "--k", str(ta["k"]), "--rows", str(ta["rows"]),
-                "--width", str(ta["width"])]
-        if ta["bwd_chunks"] is not None:
-            argv += ["--bwd-chunks", str(ta["bwd_chunks"])]
+        ex = self.train_exchange()
+        argv = ["--compressor", ex.compressor,
+                "--buckets", str(ex.buckets),
+                "--k", str(ex.sketch.k), "--rows", str(ex.sketch.rows),
+                "--width", str(ex.sketch.width),
+                "--sketch-seed", str(ex.sketch.seed)]
+        if ex.bwd_chunks is not None:
+            argv += ["--bwd-chunks", str(ex.bwd_chunks)]
         return argv
-
-    def sim_kw(self) -> dict:
-        """``SimConfig`` field overrides for ``simulate --plan``: the tuned
-        exchange config plus the env's topology/link regime.
-
-        CALIBRATED alpha/beta are not expressible in SimConfig's preset
-        name — callers must also build the network from
-        ``self.env.network()`` and pass it to ``simulate(net=...)``, as
-        ``repro.launch.simulate --plan`` does."""
-        return {
-            "d": int(self.env.d), "method": self.choice.method,
-            "buckets": int(self.choice.buckets),
-            "bwd_chunks": int(self.choice.bwd_chunks),
-            "bwd_frac": float(self.env.bwd_frac),
-            "k": int(self.geometry["k"]), "rows": int(self.geometry["rows"]),
-            "width": int(self.geometry["width"]),
-            "shape": self.choice.shape, "topology": self.env.topology,
-            "link": self.env.link, "intra_link": self.env.intra_link,
-            "group_size": int(self.env.group_size),
-        }
 
     def summary(self) -> str:
         pr = self.predicted
@@ -143,18 +145,21 @@ class TunePlan:
 
 def from_search(env: Env, space: SearchSpace, ranked: list, skipped: list,
                 *, seed: int, n_valid: int, error_probe: bool,
-                probe_d: int, top: int) -> TunePlan:
+                probe_d: int, top: int,
+                spec: RunSpec | None = None) -> TunePlan:
     """Assemble the plan from a ranked [(Candidate, CandidateCost,
-    geometry)] list (best first). The winner's geometry rides along
-    resolved; runners-up keep candidate + cost for the report."""
+    geometry)] list (best first). The winner is applied as a spec delta
+    onto ``spec`` (or a ``RunSpec`` reconstructed from the env) with its
+    resolved geometry; runners-up keep candidate + cost for the report."""
     if not ranked:
         raise ValueError("search produced no valid candidates "
                          f"({len(skipped)} skipped)")
     best, best_cost, best_geo = ranked[0]
+    base = spec if spec is not None else RunSpec.from_env(env)
     alts = [{"candidate": c.to_json(), "cost": cc.to_json(),
              "geometry": dict(g)} for c, cc, g in ranked[1:top]]
     return TunePlan(
-        env=env, choice=best,
+        spec=best.apply(base, geometry=best_geo), choice=best,
         geometry={"k": best_geo["k"], "rows": best_geo["rows"],
                   "width": best_geo["width"], "buckets": best_geo["buckets"],
                   "bucket_sizes": list(best_geo["bucket_sizes"])},

@@ -29,7 +29,8 @@ def search(space: SearchSpace, env: Env, *, top: int = 5,
            budget: int | None = None, seed: int = 0,
            error_probe: bool = True, probe_d: int = 1 << 14,
            max_error: float | None = None,
-           cost_model: CostModel | None = None) -> TunePlan:
+           cost_model: CostModel | None = None,
+           spec=None) -> TunePlan:
     """Run the tuner; returns the winning ``TunePlan``.
 
     budget: max candidates to evaluate (None = full grid). Subsampling is
@@ -37,6 +38,9 @@ def search(space: SearchSpace, env: Env, *, top: int = 5,
     retains each method's all-defaults baseline if it survived validation.
     max_error: drop candidates whose error proxy exceeds this (recorded
     in ``plan.skipped`` with the measured value).
+    spec: the base ``repro.api.RunSpec`` the winning candidate is applied
+    onto (``plan.spec``); None reconstructs one from ``env`` — for CLI
+    runs pass the resolved spec so arch/steps/seed provenance rides along.
     """
     valid, skipped = enumerate_valid(space, env)
     n_valid = len(valid)
@@ -70,4 +74,4 @@ def search(space: SearchSpace, env: Env, *, top: int = 5,
     ranked.sort(key=lambda t: rank_key(t[0], t[1]))
     return from_search(env, space, ranked, skipped, seed=seed,
                        n_valid=n_valid, error_probe=error_probe,
-                       probe_d=probe_d, top=max(1, top))
+                       probe_d=probe_d, top=max(1, top), spec=spec)

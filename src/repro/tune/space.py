@@ -30,8 +30,8 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
-from repro.core.gs_sgd import validate_exchange_config
-from repro.sim.network import PRESETS, LinkSpec, NetworkModel, make_network
+from repro.api import ExchangeSpec, RunSpec, SketchSpec
+from repro.sim.network import LinkSpec, NetworkModel
 from repro.sim.replay import ExchangeReplay
 
 
@@ -58,16 +58,12 @@ class Env:
     link_beta: float | None = None    # calibrated Eq. 1 inverse bw (s/B)
 
     def link_spec(self) -> LinkSpec:
-        base = PRESETS[self.link]
-        if self.link_alpha is None and self.link_beta is None:
-            return base
-        return LinkSpec(
-            alpha=base.alpha if self.link_alpha is None else self.link_alpha,
-            beta=base.beta if self.link_beta is None else self.link_beta)
+        # single source: the spec layer's calibrated-override-over-preset
+        # merge (a second copy here would silently diverge)
+        return RunSpec.from_env(self).cluster.link_spec()
 
     def network(self) -> NetworkModel:
-        return make_network(self.topology, link=self.link_spec(),
-                            group_size=self.group_size, intra=self.intra_link)
+        return RunSpec.from_env(self).cluster.network()
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -121,6 +117,41 @@ class Candidate:
     def from_json(cls, d: dict) -> "Candidate":
         return cls(**d)
 
+    def exchange_spec(self, env: Env) -> ExchangeSpec:
+        """This candidate as an ``ExchangeSpec`` delta over the env's
+        constraints — the object the spec layer validates."""
+        return ExchangeSpec(
+            compressor=self.method, buckets=int(self.buckets),
+            bwd_chunks=(int(self.bwd_chunks) if self.bwd_chunks > 1
+                        else None),
+            microbatch=env.microbatch, shape=self.shape,
+            sketch=SketchSpec(rows=self.rows, width=self.width,
+                              k=self.k(env.d)))
+
+    def apply(self, spec: RunSpec, geometry: dict | None = None) -> RunSpec:
+        """Apply this candidate as a delta onto a base ``RunSpec``.
+
+        ``geometry`` (the searcher's resolved k/rows/width ints from the
+        real replay build) pins the sketch so applying the result never
+        re-derives anything; without it the candidate's own (possibly
+        symbolic) values ride along. ``bwd_chunks=1`` maps to ``None``
+        (monolithic backward — pinned bit-exact vs the readiness path at
+        one chunk, and keeps plans applicable to microbatched runs)."""
+        sk = spec.exchange.sketch
+        if geometry is not None:
+            sk = dataclasses.replace(sk, k=int(geometry["k"]),
+                                     rows=int(geometry["rows"]),
+                                     width=int(geometry["width"]))
+        else:
+            sk = dataclasses.replace(sk, rows=self.rows, width=self.width,
+                                     k=self.k(spec.resolve_d()))
+        ex = dataclasses.replace(
+            spec.exchange, compressor=self.method, buckets=int(self.buckets),
+            bwd_chunks=(int(self.bwd_chunks) if self.bwd_chunks > 1
+                        else None),
+            shape=self.shape, sketch=sk)
+        return dataclasses.replace(spec, exchange=ex)
+
 
 def _tup(xs) -> tuple:
     return tuple(xs)
@@ -165,17 +196,17 @@ class SearchSpace:
 def validate(cand: Candidate, env: Env) -> ExchangeReplay:
     """Build the candidate's replay through the REAL runtime constructors.
 
-    Raises ``ValueError`` exactly where the runtime would: the shared
-    ``validate_exchange_config`` (microbatch + bwd_chunks), the
-    ``ExchangeReplay``/collective-shape contracts (gTop-k is tree-only,
-    Sketched-SGD is PS-only), and the staged-compressor requirement of the
-    readiness interleave (``make_train_step`` silently falls back to the
-    post-accumulation exchange for non-staged compressors, so crediting
-    them with interleave savings would mis-rank the space).
+    Raises ``ValueError`` exactly where the runtime would: the central
+    ``repro.api`` spec validation (the same ``ExchangeSpec.validate`` the
+    CLIs and ``make_train_step`` raise through — microbatch + bwd_chunks,
+    unknown methods/shapes), the ``ExchangeReplay``/collective-shape
+    contracts (gTop-k is tree-only, Sketched-SGD is PS-only), and the
+    staged-compressor requirement of the readiness interleave
+    (``make_train_step`` silently falls back to the post-accumulation
+    exchange for non-staged compressors, so crediting them with
+    interleave savings would mis-rank the space).
     """
-    validate_exchange_config(
-        microbatch=env.microbatch,
-        bwd_chunks=cand.bwd_chunks if cand.bwd_chunks > 1 else None)
+    cand.exchange_spec(env).validate()
     rep = ExchangeReplay(cand.method, env.d, buckets=cand.buckets,
                          k=cand.k(env.d), rows=cand.rows, width=cand.width,
                          shape=cand.shape, group_size=env.group_size)

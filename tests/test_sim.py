@@ -182,6 +182,37 @@ def test_heterogeneous_slow_worker_stretches_rounds():
         sum(r.bytes_critical for r in base))  # bytes unchanged, time isn't
 
 
+def test_slow_workers_flag_reaches_hetero_worst_link_path():
+    """The ``--slow-workers ID:FACTOR`` CLI path end-to-end: the spec
+    builds a Heterogeneous network, its worst_link is stretched by the
+    slow worker's factor, and a full sim run prices strictly more comm
+    while it is a collective member."""
+    from repro.api import RunSpec, apply_args, build_parser
+
+    argv = ["--p", "8", "--d", "100000", "--steps", "3",
+            "--compute-jitter", "0", "--no-drop-stragglers",
+            "--slow-workers", "3:10"]
+    ap = build_parser("sim")
+    slow_spec = apply_args(RunSpec(), ap.parse_args(argv), "sim")
+    base_spec = apply_args(RunSpec(), ap.parse_args(argv[:-2]), "sim")
+    assert slow_spec.cluster.slow_workers == {3: 10.0}
+
+    net = slow_spec.cluster.network()
+    assert isinstance(net, Heterogeneous)
+    base_net = base_spec.cluster.network()
+    ids = list(range(8))
+    assert net.worst_link(ids).alpha == pytest.approx(
+        10.0 * base_net.worst_link(ids).alpha)
+    assert net.worst_link([0, 1]).alpha == base_net.worst_link([0, 1]).alpha
+
+    slow_tot = simulate(slow_spec.sim_config(), net=net).totals()
+    base_tot = simulate(base_spec.sim_config(), net=base_net).totals()
+    assert slow_tot["comm"] > base_tot["comm"]
+    # payload bytes are untouched — only the link times stretch
+    assert slow_tot["bytes_critical"] == pytest.approx(
+        base_tot["bytes_critical"])
+
+
 def test_hierarchical_worst_link_and_locality():
     net = Hierarchical(group_size=4, intra=LinkSpec(1e-6, 1e-11),
                        inter=LinkSpec(1e-3, 1e-8))

@@ -39,9 +39,11 @@ def test_plan_round_trip(tmp_path):
     plan.save(path)
     back = TunePlan.load(path)
     assert back.to_json() == plan.to_json()
-    assert back.train_args() == plan.train_args()
+    assert back.spec == plan.spec            # the serialized RunSpec
+    assert back.train_exchange() == plan.train_exchange()
     assert back.train_argv() == plan.train_argv()
-    assert back.sim_kw() == plan.sim_kw()
+    # the spec carries the env it was tuned for
+    assert back.env == ENV
     # the schema guard rejects foreign documents
     (tmp_path / "junk.json").write_text(json.dumps({"schema": "nope"}))
     with pytest.raises(ValueError):
@@ -50,10 +52,15 @@ def test_plan_round_trip(tmp_path):
 
 def test_plan_applies_to_simconfig():
     plan = search(SMALL, ENV, seed=0, error_probe=False)
-    cfg = SimConfig(p=4, steps=2, **plan.sim_kw())
+    spec = dataclasses.replace(
+        plan.spec, steps=2,
+        cluster=dataclasses.replace(plan.spec.cluster, p=4))
+    cfg = spec.sim_config()
+    assert isinstance(cfg, SimConfig) and cfg.p == 4 and cfg.steps == 2
     assert cfg.method == plan.choice.method
     assert cfg.buckets == plan.choice.buckets
     assert cfg.k == plan.geometry["k"]
+    assert cfg.width == plan.geometry["width"]
 
 
 def test_sim_only_plans_refuse_train_application():
@@ -63,9 +70,14 @@ def test_sim_only_plans_refuse_train_application():
                         shapes=("hier",))
     plan = search(space, ENV, seed=0, error_probe=False)
     with pytest.raises(ValueError, match="shape"):
-        plan.train_args()
+        plan.train_exchange()
+    with pytest.raises(ValueError, match="shape"):
+        plan.train_argv()
+    # ...and make_train_step itself refuses a shaped spec
+    with pytest.raises(ValueError, match="simulator-only"):
+        plan.spec.make_train_step()
     # ...but the simulator applies it fine
-    assert plan.sim_kw()["shape"] == "hier"
+    assert plan.spec.sim_config().shape == "hier"
 
 
 def test_simulate_plan_applies_calibrated_link(tmp_path):
@@ -74,8 +86,10 @@ def test_simulate_plan_applies_calibrated_link(tmp_path):
     from repro.launch.simulate import main as sim_main
 
     plan = search(SMALL, ENV, seed=0, error_probe=False)
-    slow_env = dataclasses.replace(plan.env, link_alpha=0.05)
-    slow = dataclasses.replace(plan, env=slow_env)
+    slow_spec = dataclasses.replace(
+        plan.spec, cluster=dataclasses.replace(plan.spec.cluster,
+                                               link_alpha=0.05))
+    slow = dataclasses.replace(plan, spec=slow_spec)
     p_fast, p_slow = str(tmp_path / "fast.json"), str(tmp_path / "slow.json")
     plan.save(p_fast)
     slow.save(p_slow)
@@ -313,7 +327,7 @@ def test_auto_tune_resolution_bit_exact_vs_manual_flags(tmp_path):
     space = SearchSpace(buckets=(4,), bwd_chunks=(2,), rows=(3,),
                         widths=(1024,), k_fracs=(0.01,))
     plan = search(space, env, top=1, seed=0, error_probe=False)
-    assert plan.train_args()["bwd_chunks"] == 2   # non-trivial resolution
+    assert plan.train_exchange().bwd_chunks == 2  # non-trivial resolution
     path = str(tmp_path / "plan.json")
     plan.save(path)
 
@@ -322,3 +336,36 @@ def test_auto_tune_resolution_bit_exact_vs_manual_flags(tmp_path):
     h_auto = train_main(common + ["--auto-tune", path])["history"]
     h_manual = train_main(common + plan.train_argv())["history"]
     assert h_auto == h_manual  # bit-exact, not approx
+
+
+def test_pre_redesign_plan_v1_loads_and_stays_bit_exact(tmp_path):
+    """A plan JSON written BEFORE the spec redesign (schema
+    repro.tune/plan@1: a tuner Env + choice + geometry instead of a
+    serialized RunSpec) must keep working through the loader shim, and
+    ``train --auto-tune`` on it must still reproduce the pinned bit-exact
+    loss history of the equivalent manual flags."""
+    from repro.launch.train import main as train_main
+    from repro.launch.tune import _arch_d
+
+    d = _arch_d("qwen3-4b", True, 2)
+    env = Env(p=2, d=d, t_compute=0.05)
+    space = SearchSpace(buckets=(2,), bwd_chunks=(2,), rows=(3,),
+                        widths=(512,), k_fracs=(0.01,))
+    plan = search(space, env, top=1, seed=0, error_probe=False)
+    v1 = {"schema": "repro.tune/plan@1", "version": 1,
+          "env": env.to_json(), "choice": plan.choice.to_json(),
+          "geometry": dict(plan.geometry),
+          "predicted": dict(plan.predicted), "alternatives": [],
+          "skipped": [], "provenance": dict(plan.provenance)}
+    path = str(tmp_path / "plan_v1.json")
+    (tmp_path / "plan_v1.json").write_text(json.dumps(v1))
+
+    old = TunePlan.load(path)
+    assert old.spec.exchange == plan.spec.exchange
+    assert old.train_argv() == plan.train_argv()
+
+    common = ["--smoke", "--workers", "2", "--steps", "2", "--batch", "4",
+              "--seq", "16", "--log-every", "5"]
+    h_auto = train_main(common + ["--auto-tune", path])["history"]
+    h_manual = train_main(common + plan.train_argv())["history"]
+    assert h_auto == h_manual  # bit-exact through the v1 shim
