@@ -12,10 +12,18 @@ counts explicit — see its docstring for why the compiled cost_analysis
 undercounts scans), cross-checked against MODEL_FLOPS = 6·N(_active)·D and
 against the per-kind collective payloads parsed from the dry-run HLO.
 
+``--measure-encode`` additionally TIMES the dispatched count-sketch encode
+(whole-vector and the fused 4-fragment partial-encode sum) on this host's
+backend and reports achieved bytes/s against the HBM streaming bound —
+the empirical check that the scatter-free Pallas encode actually sits in
+the memory-bound regime the model assumes. ``--json PATH`` writes the
+rows plus the measurement as a BENCH_roofline.json artifact (CI uploads
+it from the kernel-smoke step).
+
 Outputs: experiments/roofline/<mesh>.csv + a markdown table for
 EXPERIMENTS.md §Roofline. Usage:
     PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi]
-        [--pod-bw GBs] [--arch ...]
+        [--pod-bw GBs] [--arch ...] [--measure-encode] [--json PATH]
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ import argparse
 import csv
 import json
 import os
+import time
 
 from benchmarks.comm_model import cell_model
 from repro.configs import ARCHS, DP_MODE
@@ -102,12 +111,79 @@ def analyze_cell(arch: str, shape: str, mesh_kind: str,
     }
 
 
+def measure_encode(d: int = 1 << 22, rows: int = 5, width: int = 1 << 14,
+                   fragments: int = 4, iters: int = 5) -> dict:
+    """Time the dispatched count-sketch encode; report achieved bytes/s.
+
+    Bytes convention: the minimal HBM traffic of one encode — read the
+    (d,) f32 gradient once, write the (rows, width) f32 sketch once —
+    so ``measured_Bps / hbm_bound_Bps`` is the fraction of the streaming
+    roofline the kernel achieves (1.0 = perfectly memory-bound; the MXU
+    one-hot contraction makes the TPU kernel land below but near it).
+    The fused variant encodes ``fragments`` equal offset slices and sums
+    the partial sketches — the per-step work of the fused interleave.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.count_sketch import SketchConfig
+    from repro.kernels import ops as kops
+
+    backend = jax.default_backend()
+    cfg = SketchConfig(rows=rows, width=width, seed=0)
+    g = jax.random.normal(jax.random.PRNGKey(0), (d,), jnp.float32)
+    nbytes = d * 4 + cfg.rows * cfg.width * 4
+
+    def timed(fn):
+        fn().block_until_ready()  # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    t_whole = timed(lambda: kops.encode(cfg, g))
+    frag = d // fragments
+
+    def fused():
+        sk = kops.encode(cfg, g[:frag], offset=0)
+        for i in range(1, fragments):
+            lo = i * frag
+            hi = d if i == fragments - 1 else lo + frag
+            sk = sk + kops.encode(cfg, g[lo:hi], offset=lo)
+        return sk
+
+    t_fused = timed(fused)
+    out = {
+        "backend": backend, "d": d, "rows": cfg.rows, "width": cfg.width,
+        "fragments": fragments, "bytes": nbytes,
+        "encode_s": t_whole, "fused_encode_s": t_fused,
+        "measured_Bps": nbytes / t_whole,
+        "fused_measured_Bps": nbytes / t_fused,
+        "hbm_bound_Bps": HBM_BW,
+        "hbm_fraction": (nbytes / t_whole) / HBM_BW,
+    }
+    if backend == "tpu" and out["hbm_fraction"] < 0.05:
+        raise AssertionError(
+            f"TPU encode achieved {out['hbm_fraction']:.3f} of the HBM "
+            "streaming bound — below the 5% sanity floor; the kernel has "
+            "regressed out of the memory-bound regime")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--arch", default=None)
     ap.add_argument("--pod-bw", type=float, default=DCI_BW / 1e9,
                     help="inter-pod GB/s (default 6.25 = 50 Gbit/s)")
+    ap.add_argument("--measure-encode", action="store_true",
+                    help="time the dispatched count-sketch encode and "
+                         "report achieved bytes/s vs the HBM bound")
+    ap.add_argument("--encode-d", type=int, default=1 << 22,
+                    help="flat dimension for --measure-encode")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows (+ encode measurement) as JSON")
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else list(ARCHS)
@@ -136,6 +212,20 @@ def main(argv=None):
               f"{r['t_collective_s'] * 1e3:8.1f}m {r['dominant']:>10s} "
               f"{r['useful_ratio']:6.2f} {r['roofline_fraction']:6.2f}")
     print(f"\nwrote {path}")
+
+    measured = None
+    if args.measure_encode:
+        measured = measure_encode(d=args.encode_d)
+        print(f"\nencode [{measured['backend']}] d={measured['d']}: "
+              f"{measured['measured_Bps'] / 1e9:.2f} GB/s whole, "
+              f"{measured['fused_measured_Bps'] / 1e9:.2f} GB/s fused "
+              f"({measured['hbm_fraction'] * 100:.1f}% of HBM bound)")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"mesh": args.mesh, "rows": rows,
+                       "measured_encode": measured}, f, indent=2)
+        print(f"wrote {args.json}")
     return rows
 
 

@@ -130,7 +130,11 @@ def parse_slow_workers(s: str) -> dict[int, float]:
 
 
 def check_exchange_config(*, microbatch: int | None = None,
-                          bwd_chunks: int | None = None) -> None:
+                          bwd_chunks: int | None = None,
+                          fuse_encode: bool = False,
+                          compressor: str = "gs-sgd",
+                          buckets: int | None = None,
+                          overlap: bool = True) -> None:
     """The step-config constraints every surface enforces identically.
 
     ``core.gs_sgd.validate_exchange_config`` (raised through by
@@ -142,6 +146,16 @@ def check_exchange_config(*, microbatch: int | None = None,
         raise ValueError("bwd_chunks interleaves the exchange with ONE "
                          "backward pass; combining it with microbatch "
                          "accumulation is not supported")
+    if fuse_encode:
+        if compressor != "gs-sgd":
+            raise ValueError(
+                "fuse_encode fragments the count-sketch encode by "
+                "linearity, which only the gs-sgd compressor supports; "
+                f"got compressor {compressor!r}")
+        if buckets is None or bwd_chunks is None or not overlap:
+            raise ValueError(
+                "fuse_encode needs the backward-interleaved exchange: "
+                "set buckets and bwd_chunks and keep overlap enabled")
 
 
 def _arch_choices():
@@ -245,6 +259,12 @@ class ExchangeSpec:
         help="split the backward into K autodiff chunks and start each "
              "bucket's exchange as its gradient is emitted ('none' = "
              "monolithic backward; 1 = readiness path, bit-exact)")
+    fuse_encode: bool = _field(
+        False, "--fuse-encode", const=True, surfaces=("train", "sim"),
+        dest="fuse_encode",
+        help="fuse the count-sketch encode into the backward-interleaved "
+             "pipeline: partial-encode each VJP fragment as it emits "
+             "(gs-sgd with buckets + bwd-chunks + overlap only)")
     microbatch: int | None = _field(
         None, "--microbatch", parse=parse_opt_int, surfaces=("train", "tune"),
         help="per-device rows per gradient-accumulation slice "
@@ -290,7 +310,11 @@ class ExchangeSpec:
             raise ValueError(
                 f"unknown allreduce_mode {self.allreduce_mode!r}")
         check_exchange_config(microbatch=self.microbatch,
-                              bwd_chunks=self.bwd_chunks)
+                              bwd_chunks=self.bwd_chunks,
+                              fuse_encode=self.fuse_encode,
+                              compressor=self.compressor,
+                              buckets=self.buckets,
+                              overlap=self.overlap)
 
     def compressor_kw(self, d: int) -> dict:
         """The ``compression.make`` kwargs this spec resolves to at flat
@@ -585,7 +609,7 @@ class RunSpec:
             shape=ex.shape, topology=cl.topology, link=cl.link,
             intra_link=cl.intra_link, group_size=cl.group_size,
             overlap=ex.overlap, bwd_chunks=ex.bwd_chunks or 1,
-            bwd_frac=cl.bwd_frac,
+            fuse_encode=ex.fuse_encode, bwd_frac=cl.bwd_frac,
             compute=ComputeModel(mean=cl.compute_mean,
                                  jitter=cl.compute_jitter, seed=self.seed),
             heartbeat_timeout=cl.heartbeat_timeout,
@@ -603,13 +627,18 @@ class RunSpec:
                    link=cl.link, intra_link=cl.intra_link,
                    group_size=cl.group_size, t_compute=cl.compute_mean,
                    bwd_frac=cl.bwd_frac, microbatch=self.exchange.microbatch,
+                   fuse_encode=self.exchange.fuse_encode,
                    link_alpha=cl.link_alpha, link_beta=cl.link_beta)
 
     @classmethod
     def from_env(cls, env) -> "RunSpec":
         """The inverse of ``env()`` for plans tuned without a full spec
         (e.g. programmatic ``search(space, env)`` calls): the cluster and
-        exchange constraints carry over; arch-level fields keep defaults."""
+        exchange constraints carry over; arch-level fields keep defaults.
+        ``fuse_encode`` is NOT carried back: a bare Env cannot express the
+        buckets/bwd_chunks candidate half that validation requires, so the
+        flag would only produce specs that refuse to validate — pricing
+        still reaches ``tune.CostModel`` through ``env()`` directly."""
         return cls(
             d=int(env.d),
             exchange=ExchangeSpec(microbatch=env.microbatch),

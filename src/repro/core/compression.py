@@ -289,6 +289,53 @@ class GsSGD(_SketchBased):
         u = ef.add(acc, g)
         return u, self._encode(u).astype(self.wire_dtype)
 
+    # Fused-encode support (DESIGN.md §7): stage 1 split into per-fragment
+    # partial encodes so the interleaved scheduler can sketch each VJP chunk
+    # the moment it emits, instead of waiting for the bucket's full range.
+    # Correctness rests on two linearities: EF add is elementwise (slicing
+    # commutes bit-exactly), and S(a + b) = S(a) + S(b) with offset hashing
+    # making partial sketches over a disjoint tiling sum to the full encode.
+
+    @property
+    def can_fuse(self) -> bool:
+        """Fragment-wise encode available? The 'ts' encoder's shifted-window
+        hashing has no offset form — only the exact multiply-shift encoder
+        fuses."""
+        return self.encoder == "exact"
+
+    def stage_encode_partial(self, acc_piece: Array, g_piece: Array,
+                             offset: int) -> tuple[Array, Array]:
+        """Stage 1, one fragment: EF add + partial encode of the bucket
+        slice [offset, offset + len(g_piece)). Returns (u_piece, partial
+        f32 sketch); ``stage_encode_merge`` assembles the bucket."""
+        u_piece = ef.add(acc_piece, g_piece)
+        sk = kops.encode(self.sketch, u_piece, offset=int(offset),
+                         use_pallas=self.use_pallas or None)
+        return u_piece, sk
+
+    def stage_encode_merge(self, pieces) -> tuple[Array, Array]:
+        """Assemble fragments into the bucket's (u, wire sketch).
+
+        ``pieces``: [(offset, u_piece, partial_sketch)] covering the bucket
+        contiguously (any order). Partials are summed in f32 in ascending
+        offset order, then cast to ``wire_dtype`` — matching
+        ``stage_encode``'s encode-then-cast, so fusing never changes what
+        crosses the wire beyond fp summation grouping.
+        """
+        pieces = sorted(pieces, key=lambda p: p[0])
+        off = 0
+        for o, u_piece, _ in pieces:
+            if int(o) != off:
+                raise ValueError(
+                    "fused encode fragments do not tile the bucket: "
+                    f"expected offset {off}, got {int(o)}")
+            off += u_piece.shape[0]
+        u = jnp.concatenate([p[1] for p in pieces])
+        sk = pieces[0][2]
+        for _, _, part in pieces[1:]:
+            sk = sk + part
+        return u, sk.astype(self.wire_dtype)
+
     def stage_reduce(self, sk: Array, *, axis: AxisNames, nworkers: int,
                      include: Array | None = None):
         """Stage 2 (communication): merge the linear sketches over workers.
@@ -615,6 +662,52 @@ def interleaved_schedule_time(t_compute, t_comm, ready, *,
     return serial, pipelined, max(0.0, pipelined - t_b), enc_done
 
 
+def fused_interleaved_schedule_time(piece_bucket, piece_compute, piece_ready,
+                                    t_comm, *,
+                                    t_backward: float | None = None
+                                    ) -> tuple[float, float, float, float]:
+    """Fused-encode variant of ``interleaved_schedule_time``.
+
+    The encode chain's work items are bucket FRAGMENTS (one per VJP chunk
+    overlapping the bucket), not whole buckets: fragment f of bucket
+    ``piece_bucket[f]`` becomes ready at ``piece_ready[f]`` and costs
+    ``piece_compute[f]`` to partial-encode; a bucket's wire sketch exists
+    once its LAST fragment's encode finishes. The comm chain is unchanged
+    (sketches still ship per bucket, in bucket-readiness order — the order
+    ``exchange_interleaved`` fires all-reduces).
+
+    Fragments encode in readiness order (ties broken toward the
+    earlier-complete bucket, matching the scheduler's emission order).
+    With exactly one fragment per bucket this reduces bit-for-bit to
+    ``interleaved_schedule_time`` — same sort keys, same recurrences.
+
+    Returns the same ``(serial, pipelined, exposed, enc_done)`` tuple.
+    """
+    n = len(t_comm)
+    bucket_ready = [0.0] * n  # when the bucket's LAST fragment emits
+    for b, rd in zip(piece_bucket, piece_ready):
+        bucket_ready[b] = max(bucket_ready[b], float(rd))
+    order = sorted(range(len(piece_ready)),
+                   key=lambda f: (piece_ready[f],
+                                  bucket_ready[piece_bucket[f]],
+                                  piece_bucket[f], f))
+    done_enc = 0.0
+    enc_done_b = [0.0] * n
+    for f in order:
+        done_enc = max(done_enc, float(piece_ready[f])) + float(
+            piece_compute[f])
+        enc_done_b[piece_bucket[f]] = done_enc
+    comm_order = sorted(range(n), key=lambda b: (bucket_ready[b], b))
+    done_comm = 0.0
+    for b in comm_order:
+        done_comm = max(done_comm, enc_done_b[b]) + float(t_comm[b])
+    rd_max = max((float(r) for r in piece_ready), default=0.0)
+    serial = (rd_max + sum(float(t) for t in piece_compute)
+              + sum(float(t) for t in t_comm))
+    t_b = rd_max if t_backward is None else float(t_backward)
+    return serial, done_comm, max(0.0, done_comm - t_b), done_enc
+
+
 def _scale_bucket(base, d_bucket: int, d_total: int, i: int):
     """Per-bucket compressor: k and sketch width scaled by the bucket's
     share of coordinates; per-bucket hash seed decorrelates collisions
@@ -659,11 +752,17 @@ class BucketedCompressor:
     name: str = "bucketed"
 
     def init(self, d: int):
-        assert d == self.spec.total, (d, self.spec.total)
+        if d != self.spec.total:
+            raise ValueError(
+                f"gradient dimension {d} does not match the bucket "
+                f"partition total {self.spec.total}")
         return tuple(c.init(s) for c, s in zip(self.parts, self.spec.sizes))
 
     def comm_stats(self, d: int, nworkers: int) -> BucketedCommStats:
-        assert d == self.spec.total, (d, self.spec.total)
+        if d != self.spec.total:
+            raise ValueError(
+                f"gradient dimension {d} does not match the bucket "
+                f"partition total {self.spec.total}")
         return BucketedCommStats(
             tuple(c.comm_stats(s, nworkers)
                   for c, s in zip(self.parts, self.spec.sizes)),

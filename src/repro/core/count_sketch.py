@@ -94,17 +94,25 @@ def hash_buckets(cfg: SketchConfig, idx: Array) -> tuple[Array, Array]:
 _CHUNK = 1 << 20  # coords per scan step: keeps (R, chunk) transients ~20 MB
 
 
-def encode(cfg: SketchConfig, g: Array) -> Array:
+def encode(cfg: SketchConfig, g: Array, offset: int = 0) -> Array:
     """Sketch a vector: (d,) -> (R, W) float32. Pure-jnp path (oracle/CPU).
 
     Chunked over coordinates so the (R, d) hash intermediates never
     materialize (at d ~ 10^8+8 they would be multi-GB); the TPU production
     path is the Pallas kernel in ``repro.kernels``.
+
+    ``offset`` hashes ``g[j]`` as coordinate ``offset + j`` — a PARTIAL
+    encode of a contiguous slice. By linearity, the sum of the partial
+    sketches of disjoint slices covering [0, d) equals the full encode;
+    this is the oracle for the fused backward-interleaved encode
+    (DESIGN.md §7), which sketches each gradient chunk as it is emitted.
     """
     g = g.reshape(-1).astype(jnp.float32)
     d = g.shape[0]
+    offset = int(offset)
     if d <= _CHUNK:
-        buckets, signs = hash_buckets(cfg, jnp.arange(d))
+        idx0 = jnp.arange(d) + offset if offset else jnp.arange(d)
+        buckets, signs = hash_buckets(cfg, idx0)
 
         def row(bk, sg):
             return jnp.zeros((cfg.width,), jnp.float32).at[bk].add(sg * g)
@@ -117,9 +125,9 @@ def encode(cfg: SketchConfig, g: Array) -> Array:
 
     def body(acc, xs):
         gc, i = xs
-        idx = jnp.arange(_CHUNK) + i * _CHUNK
+        idx = jnp.arange(_CHUNK) + i * _CHUNK + offset
         buckets, signs = hash_buckets(cfg, idx)
-        valid = (idx < d).astype(jnp.float32)
+        valid = (idx < d + offset).astype(jnp.float32)
 
         def row(a, bk, sg):
             return a.at[bk].add(sg * gc * valid)

@@ -109,13 +109,20 @@ def local_seg_shapes(fs: FlatSpec, ma: MeshAxes,
     div = seg_divisors(ma, dp_mode)
     out = {}
     for k, shape in fs.seg_shapes().items():
-        assert shape[-1] % div[k] == 0, (k, shape, div[k])
+        if shape[-1] % div[k] != 0:
+            raise ValueError(
+                f"segment {k!r} last dim {shape[-1]} is not divisible by "
+                f"its on-device divisor {div[k]} (shape {shape})")
         out[k] = shape[:-1] + (shape[-1] // div[k],)
     return out
 
 
 def validate_exchange_config(*, microbatch: int | None = None,
-                             bwd_chunks: int | None = None) -> None:
+                             bwd_chunks: int | None = None,
+                             fuse_encode: bool = False,
+                             compressor: str = "gs-sgd",
+                             buckets: int | None = None,
+                             overlap: bool = True) -> None:
     """Reject exchange configs the runtime cannot build.
 
     The constraint itself lives in ``repro.api.spec.check_exchange_config``
@@ -125,7 +132,9 @@ def validate_exchange_config(*, microbatch: int | None = None,
     identical message.
     """
     from repro.api.spec import check_exchange_config
-    check_exchange_config(microbatch=microbatch, bwd_chunks=bwd_chunks)
+    check_exchange_config(microbatch=microbatch, bwd_chunks=bwd_chunks,
+                          fuse_encode=fuse_encode, compressor=compressor,
+                          buckets=buckets, overlap=overlap)
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +195,8 @@ def exchange_bucketed(bc: "comp.BucketedCompressor", ef_state, g_flat,
 
 def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
                          ef_state, bwd_steps, top_grads, shapes: dict, *,
-                         axis, nworkers: int, key=None, include=None):
+                         axis, nworkers: int, key=None, include=None,
+                         fuse_encode: bool = False):
     """Readiness-driven bucketed exchange interleaved with backward chunks.
 
     Drives the backward itself: ``bwd_steps`` / ``top_grads`` come from
@@ -207,6 +217,17 @@ def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
     post-accumulation scheduler for any chunk count — pinned bit-exactly
     at ``chunks=1`` by tests/test_readiness.py. Returns (upd_sum, ef_new,
     BucketedCommStats) with buckets in packed order.
+
+    fuse_encode=True (DESIGN.md §7, fused formulation): instead of holding
+    each emitted slice until its bucket completes and then encoding the
+    assembled range, every slice is EF-added and partial-encoded the moment
+    it emits (``stage_encode_partial`` with the slice's offset inside its
+    bucket); at the bucket's readiness event the partial sketches are
+    summed (count-sketch linearity) and cast to the wire dtype
+    (``stage_encode_merge``). The encode cost rides under the remaining
+    backward chunks instead of serializing at the readiness event. Buckets
+    whose compressor cannot fuse (no ``can_fuse``, e.g. the 'ts' encoder
+    or a dense baseline) silently keep the assemble-then-encode path.
     """
     parts, spec = bc.parts, bc.spec
     n = spec.n
@@ -217,7 +238,30 @@ def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
     for i in plan.order:
         by_event.setdefault(plan.readiness[i], []).append(i)
 
+    fusable = [bool(fuse_encode and getattr(p, "can_fuse", False)
+                    and hasattr(p, "stage_encode_partial")) for p in parts]
+    frags: list[list] = [[] for _ in range(n)]  # (off-in-bucket, u, sketch)
+
     pieces: list[tuple[int, Array]] = []   # (packed offset, flat grad slice)
+
+    def fuse_piece(off: int, arr: Array) -> None:
+        """Partial-encode the overlap of one emitted slice with every
+        fusable bucket, at its offset inside that bucket."""
+        for i in range(n):
+            if not fusable[i]:
+                continue
+            o, s = spec.offsets[i], spec.sizes[i]
+            lo, hi = max(o, off), min(o + s, off + arr.shape[0])
+            if lo < hi:
+                g_piece = jax.lax.slice_in_dim(arr, lo - off, hi - off)
+                acc_piece = jax.lax.slice_in_dim(ef_state[i], lo - o, hi - o)
+                u_piece, sk = parts[i].stage_encode_partial(
+                    acc_piece, g_piece, lo - o)
+                frags[i].append((lo - o, u_piece, sk))
+
+    def emit(off: int, arr: Array) -> None:
+        pieces.append((off, arr))
+        fuse_piece(off, arr)
 
     def assemble(i: int) -> Array:
         o, s = spec.offsets[i], spec.sizes[i]
@@ -227,7 +271,10 @@ def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
             if lo < hi:
                 got.append((lo, jax.lax.slice_in_dim(arr, lo - off, hi - off)))
         got.sort(key=lambda t: t[0])
-        assert sum(a.shape[0] for _, a in got) == s, (i, o, s)
+        if sum(a.shape[0] for _, a in got) != s:
+            raise ValueError(
+                f"bucket {i} (offset {o}, size {s}) is not covered by the "
+                "emitted gradient slices at its readiness event")
         return got[0][1] if len(got) == 1 else jnp.concatenate(
             [a for _, a in got])
 
@@ -249,19 +296,20 @@ def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
         if ev < n_chunks:
             (a, b), d_cs, d_cr = bwd_steps[ev]()
             if d_cs.size:
-                pieces.append((offs["cycles_s"] + a * f_cs,
-                               d_cs.reshape(-1)))
+                emit(offs["cycles_s"] + a * f_cs, d_cs.reshape(-1))
             if d_cr.size:
-                pieces.append((offs["cycles_r"] + a * f_cr,
-                               d_cr.reshape(-1)))
+                emit(offs["cycles_r"] + a * f_cr, d_cr.reshape(-1))
         if ev == n_chunks - 1:  # top segments finalize with the last chunk
             d_ts, d_tr = top_grads()
             if d_ts.size:
-                pieces.append((offs["top_s"], d_ts))
+                emit(offs["top_s"], d_ts.reshape(-1))
             if d_tr.size:
-                pieces.append((offs["top_r"], d_tr))
+                emit(offs["top_r"], d_tr.reshape(-1))
         for i in by_event.get(ev, []):
-            us[i], sk = parts[i].stage_encode(ef_state[i], assemble(i))
+            if fusable[i]:
+                us[i], sk = parts[i].stage_encode_merge(frags[i])
+            else:
+                us[i], sk = parts[i].stage_encode(ef_state[i], assemble(i))
             sk_sum[i], scale[i] = parts[i].stage_reduce(
                 sk, axis=axis, nworkers=nworkers, include=include)
             launched.append(i)
@@ -295,11 +343,15 @@ class TrainStep:
     overlap: bool = True          # pipelined bucket schedule (n_buckets > 1)
     bwd_chunks: int = 0           # backward chunks (0 = monolithic backward)
     plan: BucketPlan | None = None  # readiness plan (bwd_chunks > 0)
+    fuse_encode: bool = False     # fragment-wise encode in the interleave
 
     def init_state(self, key: Array, opt: Optimizer) -> Any:
         """Concrete state for single-device (tp=1, dp=1) smoke/test runs."""
         from repro.models.flatten import init_flat_params
-        assert self.ma.tp == 1 and self.ma.dp_size == 1
+        if self.ma.tp != 1 or self.ma.dp_size != 1:
+            raise ValueError(
+                "init_state builds single-device state only (tp=1, dp=1); "
+                f"got tp={self.ma.tp}, dp={self.ma.dp_size}")
         params = init_flat_params(self.fs.cfg, key, 1, self.fs)
         return make_state(params, opt, self.compressor, self.d_local)
 
@@ -326,7 +378,8 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                     fs: FlatSpec | None = None,
                     buckets: int | None = None,
                     overlap: bool = True,
-                    bwd_chunks: int | None = None) -> TrainStep:
+                    bwd_chunks: int | None = None,
+                    fuse_encode: bool = False) -> TrainStep:
     """Build the per-device train step (to be wrapped in shard_map/vmap).
 
     spec: a ``repro.api.ExchangeSpec`` — the spec-first entry every CLI
@@ -364,6 +417,11 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     readiness path with a single chunk: bit-exact vs the bwd_chunks=None
     step. Incompatible with ``microbatch`` (the exchange must see the one
     accumulated gradient it interleaves with).
+
+    fuse_encode: partial-encode each emitted VJP fragment immediately
+    (count-sketch linearity) instead of assemble-then-encode at the
+    bucket's readiness event — gs-sgd with buckets + bwd_chunks +
+    overlap only (validated); see ``exchange_interleaved``.
     """
     import math as _math
 
@@ -375,7 +433,8 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
     if spec is not None:
         if (compressor_name != "gs-sgd" or compressor_kw is not None
                 or microbatch is not None or buckets is not None
-                or overlap is not True or bwd_chunks is not None):
+                or overlap is not True or bwd_chunks is not None
+                or fuse_encode is not False):
             raise ValueError("make_train_step: pass either spec= or the "
                              "legacy exchange kwargs, not both")
         spec.validate()
@@ -389,7 +448,12 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
         compressor_kw = spec.compressor_kw(d_local) or None
         microbatch, buckets = spec.microbatch, spec.buckets
         overlap, bwd_chunks = spec.overlap, spec.bwd_chunks
-    validate_exchange_config(microbatch=microbatch, bwd_chunks=bwd_chunks)
+        fuse_encode = spec.fuse_encode
+    validate_exchange_config(
+        microbatch=microbatch, bwd_chunks=bwd_chunks,
+        fuse_encode=fuse_encode,
+        compressor=compressor_name if compressor_name else "dense",
+        buckets=buckets, overlap=overlap)
 
     # In 'dp' the compressor sums raw per-worker grads over all dp axes; in
     # 'fsdp' backward's psum_scatter has already summed over 'data', so only
@@ -414,7 +478,10 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
             compressor = comp.make(compressor_name, **(compressor_kw or {}))
         if bucketed:
             plan = bucket_plan(shapes, buckets, bwd_chunks or 1)
-            assert plan.sizes == bucket_sizes(shapes, buckets)
+            if plan.sizes != bucket_sizes(shapes, buckets):
+                raise ValueError(
+                    f"readiness plan bucket sizes {plan.sizes} disagree "
+                    f"with the partition {bucket_sizes(shapes, buckets)}")
             compressor = comp.bucketize(compressor, plan.sizes)
 
     # Readiness interleave needs a staged bucketed compressor and the
@@ -455,7 +522,10 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
         elif mb >= b_loc:
             loss, grads = jax.value_and_grad(loss_of)(params, batch)
         else:
-            assert b_loc % mb == 0, (b_loc, mb)
+            if b_loc % mb != 0:
+                raise ValueError(
+                    f"local batch {b_loc} is not divisible by "
+                    f"microbatch {mb}")
             n_mb = b_loc // mb
             slices = jax.tree_util.tree_map(
                 lambda a: a.reshape((n_mb, mb) + a.shape[1:]), batch)
@@ -494,7 +564,8 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
             if interleave:
                 upd, ef_new, _ = exchange_interleaved(
                     compressor, plan, ef32, bwd_steps, top_grads, shapes,
-                    axis=comp_axes, nworkers=comp_n, **kw)
+                    axis=comp_axes, nworkers=comp_n,
+                    fuse_encode=fuse_encode, **kw)
             else:
                 g_flat = (flat_of_chunks() if grads is None
                           else pack_segs(grads))
@@ -546,7 +617,7 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                                 if isinstance(compressor,
                                               comp.BucketedCompressor) else 1),
                      overlap=overlap, bwd_chunks=(bwd_chunks or 0),
-                     plan=plan)
+                     plan=plan, fuse_encode=fuse_encode)
 
 
 # ---------------------------------------------------------------------------

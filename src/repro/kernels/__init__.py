@@ -1,5 +1,5 @@
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 from repro.kernels.sketch_encode import sketch_encode
 from repro.kernels.sketch_decode import sketch_decode
 
-__all__ = ["ops", "ref", "sketch_encode", "sketch_decode"]
+__all__ = ["dispatch", "ops", "ref", "sketch_encode", "sketch_decode"]

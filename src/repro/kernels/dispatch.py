@@ -1,0 +1,59 @@
+"""Kernel dispatch policy — ONE table for every Count-Sketch entry point.
+
+Every kernel entry (``ops.encode``/``decode``/the bucketed variants/the
+heavymix recovery) and every direct kernel call (``sketch_encode``,
+``sketch_decode``, ``ts_encode``) resolves (use_pallas, interpret) through
+the same pure function of the backend, so a direct TPU caller that
+bypasses ``ops.py`` can no longer silently land in the Pallas interpreter
+(the old ``interpret: bool = True`` hardcoded default).
+
+Policy table (``resolve_dispatch(backend, use_pallas, interpret)``):
+
+    backend   use_pallas  interpret   -> runs
+    --------  ----------  ---------   ------------------------------
+    tpu       None/True   None        pallas, compiled
+    tpu       None/True   True        pallas, interpreter (debugging)
+    tpu       False       any         pure-jnp reference
+    cpu/gpu   None        any         pure-jnp reference (fast on CPU)
+    cpu/gpu   True        None        pallas, interpreter (kernel tests)
+    cpu/gpu   True        False       pallas, compiled (explicit override)
+
+``None`` always means "derive from the backend": Pallas runs by default
+only where it compiles natively (TPU), and the interpreter is the default
+only where the native build is unavailable.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_dispatch(backend: str, use_pallas: bool | None = None,
+                     interpret: bool | None = None) -> tuple[bool, bool]:
+    """Resolve the dispatch table above to (run_pallas, interpret_mode).
+
+    Pure in ``backend`` (a ``jax.default_backend()`` string) so the whole
+    table is unit-testable without device fakery.
+    """
+    if use_pallas is None:
+        use_pallas = backend == "tpu"
+    if not use_pallas:
+        return False, False
+    if interpret is None:
+        interpret = backend != "tpu"
+    return True, bool(interpret)
+
+
+def default_interpret(interpret: bool | None = None) -> bool:
+    """Backend-derived ``interpret`` default for direct kernel callers.
+
+    Identical to the ``use_pallas=True`` row of ``resolve_dispatch`` at
+    the current ``jax.default_backend()``.
+    """
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret)

@@ -16,14 +16,34 @@ from repro.core import count_sketch as cs
 Array = jax.Array
 
 
-def count_sketch_encode(cfg: cs.SketchConfig, g: Array) -> Array:
-    """(d,) -> (R, W) float32 sketch. Oracle for kernels.sketch_encode."""
-    return cs.encode(cfg, g)
+def count_sketch_encode(cfg: cs.SketchConfig, g: Array,
+                        offset: int = 0) -> Array:
+    """(d,) -> (R, W) float32 sketch. Oracle for kernels.sketch_encode.
+
+    ``offset`` hashes ``g[j]`` as coordinate ``offset + j`` (partial encode
+    of a contiguous slice — oracle for the fused-interleave kernel path).
+    """
+    return cs.encode(cfg, g, offset=offset)
 
 
-def count_sketch_decode(cfg: cs.SketchConfig, sketch: Array, d: int) -> Array:
-    """(R, W) -> (d,) median-of-rows estimates. Oracle for kernels.sketch_decode."""
+def count_sketch_decode(cfg: cs.SketchConfig, sketch: Array, d: int,
+                        offset: int = 0) -> Array:
+    """(R, W) -> (d,) median-of-rows estimates. Oracle for kernels.sketch_decode.
+
+    ``offset`` estimates coordinates [offset, offset + d) — the gather-style
+    partial decode matching the partial encode above.
+    """
+    if offset:
+        return cs.decode_at(cfg, sketch, jnp.arange(d) + int(offset))
     return cs.decode(cfg, sketch, d)
+
+
+def heavymix_recover(cfg: cs.SketchConfig, sketch: Array, k: int,
+                     d: int) -> tuple[Array, Array]:
+    """Greedy-fill HEAVYMIX selection (idx, est). Oracle for the fused
+    Pallas decode+score recovery kernel (kernels.heavymix_topk)."""
+    from repro.core import heavymix as hm
+    return hm.heavymix(cfg, sketch, k, d)
 
 
 def count_sketch_encode_onehot(cfg: cs.SketchConfig, g: Array) -> Array:

@@ -16,6 +16,10 @@ and on the last bucket block the kernel reduces rows to the median estimate.
 Median-of-R for small static R is a jnp.sort over the row axis (R <= 8 — a
 fixed sorting network after lowering).
 
+``index_offset`` estimates coordinates [index_offset, index_offset + d) —
+the gather-style partial decode matching ``sketch_encode``'s partial
+encode (a bucket-local range of the fused interleaved pipeline).
+
 VMEM per step ~= block_d*block_w*4 (one-hot) + R*(block_w + block_d)*4:
 2.1 MB at defaults. Matmul dims MXU-aligned as in the encoder.
 """
@@ -30,12 +34,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.count_sketch import SketchConfig
+from repro.kernels.dispatch import default_interpret
 
 Array = jax.Array
 
 
 def _decode_kernel(hash_ref, sk_ref, out_ref, acc_ref, *, rows: int,
-                   block_d: int, block_w: int, shift: int, n_w: int):
+                   block_d: int, block_w: int, shift: int, n_w: int,
+                   index_offset: int):
     i = pl.program_id(0)  # coordinate block (outer)
     j = pl.program_id(1)  # bucket block (inner, accumulation axis)
 
@@ -44,7 +50,7 @@ def _decode_kernel(hash_ref, sk_ref, out_ref, acc_ref, *, rows: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     idx = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 0)
-           + jnp.uint32(i * block_d))
+           + jnp.uint32(index_offset + i * block_d))
     col = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 1)
            + jnp.uint32(j * block_w))
 
@@ -73,22 +79,39 @@ def _decode_kernel(hash_ref, sk_ref, out_ref, acc_ref, *, rows: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "d", "block_d", "block_w", "interpret"),
+    static_argnames=("cfg", "d", "index_offset", "block_d", "block_w",
+                     "interpret"),
 )
 def sketch_decode(cfg: SketchConfig, sketch: Array, d: int, *,
-                  block_d: int = 1024, block_w: int = 512,
-                  interpret: bool = True) -> Array:
-    """Estimate all ``d`` coordinates from an (R, W) sketch -> (d,) f32."""
+                  index_offset: int = 0, block_d: int = 1024,
+                  block_w: int = 512,
+                  interpret: bool | None = None) -> Array:
+    """Estimate ``d`` coordinates from an (R, W) sketch -> (d,) f32.
+
+    ``index_offset``: estimate coordinates [index_offset, index_offset+d)
+    (partial decode). ``interpret=None`` derives the mode from the backend
+    via the ``kernels.dispatch`` policy table (compiled on TPU,
+    interpreter elsewhere).
+    """
+    interpret = default_interpret(interpret)
     block_d = min(block_d, max(8, d))
     block_w = min(block_w, cfg.width)
     d_pad = d + ((-d) % block_d)
     n_d = d_pad // block_d
-    n_w = cfg.width // block_w
+    # Pad the bucket axis to a block_w multiple with zero sketch columns:
+    # bucket ids are < width so the padded columns are never selected.
+    # Without this, a width not divisible by block_w silently dropped the
+    # tail column blocks from every coordinate's gather.
+    w_pad = cfg.width + ((-cfg.width) % block_w)
+    n_w = w_pad // block_w
+    sk = sketch.astype(jnp.float32)
+    if w_pad != cfg.width:
+        sk = jnp.pad(sk, ((0, 0), (0, w_pad - cfg.width)))
     hash_params = jnp.asarray(cfg.hash_params)
 
     kernel = functools.partial(
         _decode_kernel, rows=cfg.rows, block_d=block_d, block_w=block_w,
-        shift=32 - cfg.log2_width, n_w=n_w)
+        shift=32 - cfg.log2_width, n_w=n_w, index_offset=int(index_offset))
 
     out = pl.pallas_call(
         kernel,
@@ -101,13 +124,13 @@ def sketch_decode(cfg: SketchConfig, sketch: Array, d: int, *,
         out_shape=jax.ShapeDtypeStruct((d_pad,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((cfg.rows, block_d), jnp.float32)],
         interpret=interpret,
-    )(hash_params, sketch.astype(jnp.float32))
+    )(hash_params, sk)
     return out[:d]
 
 
 def sketch_decode_bucketed(cfgs, sketches, sizes, *, block_d: int = 1024,
                            block_w: int = 512,
-                           interpret: bool = True) -> Array:
+                           interpret: bool | None = None) -> Array:
     """Per-bucket decode back to one flat estimate vector.
 
     Inverse companion of ``sketch_encode_bucketed``: bucket i's coordinates

@@ -22,6 +22,13 @@ VMEM per step ~= block_d * block_w * 4 B (one-hot tile) + R * block_w * 4 B
 (accumulator) + block_d * 4 B (gradient block): 2.1 MB at the 1024x512
 default. All matmul dims are multiples of 128 -> MXU-aligned.
 
+``index_offset`` hashes element ``j`` of ``g`` as coordinate
+``index_offset + j`` — a PARTIAL encode of a contiguous slice. Count-sketch
+linearity makes the sum of partial sketches over disjoint slices equal the
+full encode, which is how the fused backward-interleaved pipeline
+(DESIGN.md §7) consumes gradient chunks incrementally instead of waiting
+for a bucket's full range.
+
 FLOP cost is 2*d*W*R MACs (the price of scatter-free encoding); for the
 sketch sizes gs-SGD uses (W ~ 2^14..2^17) this is a small fraction of the
 model's backward FLOPs — quantified in benchmarks/time_breakdown.py.
@@ -36,12 +43,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.count_sketch import SketchConfig
+from repro.kernels.dispatch import default_interpret
 
 Array = jax.Array
 
 
 def _encode_kernel(hash_ref, g_ref, out_ref, *, rows: int, block_d: int,
-                   block_w: int, shift: int):
+                   block_w: int, shift: int, index_offset: int):
     j = pl.program_id(0)  # bucket-column block (outer)
     i = pl.program_id(1)  # element block (inner, accumulation axis)
 
@@ -53,7 +61,7 @@ def _encode_kernel(hash_ref, g_ref, out_ref, *, rows: int, block_d: int,
 
     # Element index for every (element, bucket) cell; uniform across columns.
     idx = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 0)
-           + jnp.uint32(i * block_d))
+           + jnp.uint32(index_offset + i * block_d))
     # Bucket id owned by each column of this tile.
     col = (jax.lax.broadcasted_iota(jnp.uint32, (block_d, block_w), 1)
            + jnp.uint32(j * block_w))
@@ -74,11 +82,21 @@ def _encode_kernel(hash_ref, g_ref, out_ref, *, rows: int, block_d: int,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "block_d", "block_w", "interpret"),
+    static_argnames=("cfg", "index_offset", "block_d", "block_w", "interpret"),
 )
-def sketch_encode(cfg: SketchConfig, g: Array, *, block_d: int = 1024,
-                  block_w: int = 512, interpret: bool = True) -> Array:
-    """Count-Sketch encode ``g`` (any shape) -> (rows, width) f32 sketch."""
+def sketch_encode(cfg: SketchConfig, g: Array, *, index_offset: int = 0,
+                  block_d: int = 1024, block_w: int = 512,
+                  interpret: bool | None = None) -> Array:
+    """Count-Sketch encode ``g`` (any shape) -> (rows, width) f32 sketch.
+
+    ``index_offset``: hash element j as coordinate index_offset + j
+    (partial encode of a slice; see module docstring).
+    ``interpret=None`` derives the mode from the backend via the
+    ``kernels.dispatch`` policy table (compiled on TPU, interpreter
+    elsewhere) — a direct caller bypassing ``kernels/ops.py`` gets the
+    same dispatch the ops layer applies.
+    """
+    interpret = default_interpret(interpret)
     g = g.reshape(-1)
     d = g.shape[0]
     block_d = min(block_d, max(8, d))
@@ -87,14 +105,19 @@ def sketch_encode(cfg: SketchConfig, g: Array, *, block_d: int = 1024,
     if pad:
         g = jnp.pad(g, (0, pad))  # zero elements contribute nothing
     n_d = g.shape[0] // block_d
-    n_w = cfg.width // block_w
+    # Pad the bucket axis up to a block_w multiple: bucket ids are < width,
+    # so the padded columns never match and stay zero (sliced off below).
+    # Without this, a width not divisible by block_w silently DROPPED the
+    # tail column blocks (n_w = width // block_w rounded down).
+    w_pad = cfg.width + ((-cfg.width) % block_w)
+    n_w = w_pad // block_w
     hash_params = jnp.asarray(cfg.hash_params)  # (R, 4) uint32
 
     kernel = functools.partial(
         _encode_kernel, rows=cfg.rows, block_d=block_d, block_w=block_w,
-        shift=32 - cfg.log2_width)
+        shift=32 - cfg.log2_width, index_offset=int(index_offset))
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=(n_w, n_d),
         in_specs=[
@@ -102,14 +125,15 @@ def sketch_encode(cfg: SketchConfig, g: Array, *, block_d: int = 1024,
             pl.BlockSpec((block_d,), lambda j, i: (i,)),
         ],
         out_specs=pl.BlockSpec((cfg.rows, block_w), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((cfg.rows, cfg.width), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((cfg.rows, w_pad), jnp.float32),
         interpret=interpret,
     )(hash_params, g)
+    return out[:, :cfg.width] if w_pad != cfg.width else out
 
 
 def sketch_encode_bucketed(cfgs, g: Array, sizes, *, block_d: int = 1024,
                            block_w: int = 512,
-                           interpret: bool = True) -> tuple[Array, ...]:
+                           interpret: bool | None = None) -> tuple[Array, ...]:
     """Per-bucket encode of a flat vector (bucketed pipeline, DESIGN.md §5).
 
     ``cfgs``/``sizes``: one SketchConfig + length per contiguous bucket
@@ -120,7 +144,10 @@ def sketch_encode_bucketed(cfgs, g: Array, sizes, *, block_d: int = 1024,
     per bucket, hence a tuple of (rows_i, width_i) sketches, not a stack.
     """
     g = g.reshape(-1)
-    assert sum(sizes) == g.shape[0], (sizes, g.shape)
+    if sum(int(s) for s in sizes) != g.shape[0]:
+        raise ValueError(
+            f"bucket sizes {tuple(sizes)} must sum to the flat gradient "
+            f"dimension {g.shape[0]}")
     out, off = [], 0
     for cfg, s in zip(cfgs, sizes):
         out.append(sketch_encode(cfg, jax.lax.slice_in_dim(g, off, off + s),

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.ts_sketch import TSketchConfig
+from repro.kernels.dispatch import default_interpret
 
 Array = jax.Array
 
@@ -70,8 +71,13 @@ def _kernel(sign_ref, g_ref, out_ref, *, rows: int, width: int,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
 def ts_encode(cfg: TSketchConfig, g: Array, *,
-              interpret: bool = True) -> Array:
-    """TS-sketch encode ``g`` -> (rows, width) f32."""
+              interpret: bool | None = None) -> Array:
+    """TS-sketch encode ``g`` -> (rows, width) f32.
+
+    ``interpret=None`` derives the mode from the backend via the
+    ``kernels.dispatch`` policy table (compiled on TPU, interpreter
+    elsewhere)."""
+    interpret = default_interpret(interpret)
     g = g.reshape(-1)
     gp = jnp.pad(g.astype(jnp.float32), (0, cfg.d_pad - g.shape[0]))
     n = cfg.d_pad // cfg.width

@@ -67,6 +67,7 @@ class SimConfig:
     group_size: int = 8
     overlap: bool = True
     bwd_chunks: int = 1               # backward-interleaved readiness chunks
+    fuse_encode: bool = False         # fragment-wise encode in the interleave
     bwd_frac: float = 2 / 3           # backward share of a step's compute
     compute: ComputeModel = dataclasses.field(default_factory=ComputeModel)
     heartbeat_timeout: float = 1.0    # seconds of silence before dead
@@ -262,6 +263,7 @@ def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
             stages = cost_cache[members] = rep.stage_times(net, members)
         pc = rep.step_cost(net, members, overlap=cfg.overlap,
                            t_backward=t_bwd, bwd_chunks=cfg.bwd_chunks,
+                           fuse_encode=cfg.fuse_encode,
                            stages=stages)
         records.append(StepRecord(
             step=s, t_start=loop.now, p=plan.n_workers,

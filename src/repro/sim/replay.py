@@ -90,6 +90,31 @@ def event_times(t_backward: float, n_chunks: int) -> list[float]:
     return [t_backward * (e + 1) / k for e in range(k)]
 
 
+def fused_pieces(offsets: Sequence[int], sizes: Sequence[int], d: int,
+                 n_chunks: int) -> list[tuple[int, float, int]]:
+    """Bucket fragments of the fused-encode schedule: (bucket, frac, event).
+
+    The reverse-emission span of event e covers coords
+    [cuts[K-1-e], cuts[K-e]) with ``cuts[m] = ceil(m*d/K)`` — the same
+    floor-span membership as ``bucket_readiness`` (coordinate c belongs to
+    span floor(c*K/d)), so each bucket's LAST fragment lands exactly on
+    its ``bucket_readiness`` event. ``frac`` is the fragment's share of
+    its bucket's coordinates (its share of the bucket's encode time).
+    One chunk => one whole fragment per bucket at event 0.
+    """
+    k = max(1, int(n_chunks))
+    d = max(1, int(d))
+    cuts = [(m * d + k - 1) // k for m in range(k + 1)]
+    out: list[tuple[int, float, int]] = []
+    for b, (o, s) in enumerate(zip(offsets, sizes)):
+        o, s = int(o), int(s)
+        for m in range(k):
+            lo, hi = max(o, cuts[m]), min(o + s, cuts[m + 1])
+            if lo < hi:
+                out.append((b, (hi - lo) / s, k - 1 - m))
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class StageTimes:
     """Per-bucket (encode, comm, recover) stage times for one membership,
@@ -266,7 +291,7 @@ class ExchangeReplay:
 
     def step_cost(self, net: netm.NetworkModel, ids: Sequence[int],
                   *, overlap: bool = True, t_backward: float = 0.0,
-                  bwd_chunks: int = 1,
+                  bwd_chunks: int = 1, fuse_encode: bool = False,
                   stages: "StageTimes | None" = None) -> PhaseCost:
         """Price one exchange. ``bwd_chunks > 1`` replays the readiness
         timeline: per-bucket ready times from the reverse-emission chunk
@@ -274,18 +299,37 @@ class ExchangeReplay:
         recurrence, and encode/comm report only the overhang past the end
         of backward (``t_backward`` seconds). ``bwd_chunks=1`` keeps the
         PR 2 post-accumulation pipeline bit-for-bit. ``stages``: a cached
-        ``stage_times(net, ids)`` result to skip the schedule walk."""
+        ``stage_times(net, ids)`` result to skip the schedule walk.
+
+        fuse_encode=True prices the fused schedule: the encode chain's
+        work items are the ``fused_pieces`` bucket fragments (each a
+        pro-rata share of its bucket's encode time, ready at its own
+        emission event) instead of whole buckets ready at their last
+        event — ``compression.fused_interleaved_schedule_time``."""
         st = stages if stages is not None else self.stage_times(net, ids)
         t_enc, t_comm = list(st.t_enc), list(st.t_comm)
         comm_serial = sum(t_comm)
         if bwd_chunks > 1 and overlap:
             d = self.bc.spec.total
-            ready_ev = bucket_readiness(self.bc.spec.offsets,
-                                        self.bc.spec.sizes, d, bwd_chunks)
             ev_t = event_times(t_backward, bwd_chunks)
-            ready = [ev_t[e] for e in ready_ev]
-            _, pipelined, _, done_enc = comp.interleaved_schedule_time(
-                t_enc, t_comm, ready, t_backward=t_backward)
+            if fuse_encode:
+                pb, pe, pr = [], [], []
+                for b, frac, e in fused_pieces(self.bc.spec.offsets,
+                                               self.bc.spec.sizes, d,
+                                               bwd_chunks):
+                    pb.append(b)
+                    pe.append(t_enc[b] * frac)
+                    pr.append(ev_t[e])
+                _, pipelined, _, done_enc = \
+                    comp.fused_interleaved_schedule_time(
+                        pb, pe, pr, t_comm, t_backward=t_backward)
+            else:
+                ready_ev = bucket_readiness(self.bc.spec.offsets,
+                                            self.bc.spec.sizes, d,
+                                            bwd_chunks)
+                ready = [ev_t[e] for e in ready_ev]
+                _, pipelined, _, done_enc = comp.interleaved_schedule_time(
+                    t_enc, t_comm, ready, t_backward=t_backward)
             encode = max(0.0, done_enc - t_backward)
             comm = pipelined - max(t_backward, done_enc)
         else:
@@ -304,6 +348,7 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
                  shape: str | None = None, topology: str = "flat",
                  link: str = "1gbe", intra_link: str = "ici",
                  group_size: int = 8, overlap: bool = True,
+                 fuse_encode: bool = False,
                  t_compute: float = 0.1, bwd_frac: float = 2 / 3,
                  net: netm.NetworkModel | None = None,
                  replay: "ExchangeReplay | None" = None) -> dict:
@@ -334,7 +379,7 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
     interleave = bwd_chunks > 1 and overlap
     t_bwd = t_compute * bwd_frac if interleave else 0.0
     pc = rep.step_cost(net, ids, overlap=overlap, t_backward=t_bwd,
-                       bwd_chunks=bwd_chunks)
+                       bwd_chunks=bwd_chunks, fuse_encode=fuse_encode)
     return {
         "step_time": t_compute + pc.total,
         "exposed_comm": pc.encode + pc.comm,

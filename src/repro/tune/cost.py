@@ -94,7 +94,8 @@ class CostModel:
         pred = predict_step(
             cand.method, self.env.d, self.env.p, bwd_chunks=cand.bwd_chunks,
             group_size=self.env.group_size, t_compute=self.env.t_compute,
-            bwd_frac=self.env.bwd_frac, net=self.net, replay=rep)
+            bwd_frac=self.env.bwd_frac, fuse_encode=self.env.fuse_encode,
+            net=self.net, replay=rep)
         err = self.error_proxy(cand, rep) if self.error_probe else 0.0
         bc = pred["bytes_critical"]
         return CandidateCost(

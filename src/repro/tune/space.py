@@ -54,6 +54,7 @@ class Env:
     t_compute: float = 0.1            # seconds of fwd+bwd per step
     bwd_frac: float = 2 / 3           # backward share of t_compute
     microbatch: int | None = None     # runtime accumulation (constrains space)
+    fuse_encode: bool = False         # price the fused-encode interleave
     link_alpha: float | None = None   # calibrated Eq. 1 startup (s)
     link_beta: float | None = None    # calibrated Eq. 1 inverse bw (s/B)
 

@@ -1,0 +1,313 @@
+"""Fused count-sketch encode in the backward-interleave (PR 6 tentpole).
+
+Pins: (1) the fused pipeline's trained parameters match the unfused
+readiness pipeline (count-sketch linearity — partial encodes of the VJP
+fragments sum to the staged whole-bucket encode); (2) ``fuse_encode=False``
+is byte-identical to the pre-PR step (the flag defaults to a no-op);
+(3) the fused schedule recurrence reduces exactly to the unfused one at
+one-fragment-per-bucket and never prices WORSE; (4) the spec layer's
+central validation rejects unfusable configurations everywhere
+(make_train_step, SimConfig, tuner) with one message.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import cli as api_cli
+from repro.api import spec as api_spec
+from repro.configs import SMOKES
+from repro.core import compression as comp
+from repro.core.gs_sgd import (MeshAxes, make_state, make_train_step,
+                               validate_exchange_config)
+from repro.models.flatten import init_flat_params
+from repro.sim import replay as rp
+from repro.sim.cluster import SimConfig
+from repro.tune.space import Env
+
+CFG = SMOKES["qwen3-4b"]
+P, B, S = 4, 2, 16
+
+_RUNS: dict[tuple, tuple] = {}  # geometry -> (state, train_step); runs are slow
+
+
+def _run(buckets=None, bwd_chunks=None, fuse_encode=False, steps=3,
+         **ckw):
+    key = (buckets, bwd_chunks, fuse_encode, steps, tuple(sorted(ckw.items())))
+    hit = _RUNS.get(key)
+    if hit is not None:
+        return hit
+    from repro.optim import make as make_opt
+    opt = make_opt("adamw", lr=2e-3)
+    ma = MeshAxes(tp=1, data=P, tp_axis=None, data_axis="data")
+    ts = make_train_step(CFG, ma, opt, dp_mode="dp", compressor_name="gs-sgd",
+                         compressor_kw=ckw or None, remat=False,
+                         dtype=jnp.float32, buckets=buckets, overlap=True,
+                         bwd_chunks=bwd_chunks, fuse_encode=fuse_encode)
+    params = init_flat_params(CFG, jax.random.PRNGKey(0), 1, ts.fs)
+    st = make_state(params, opt, ts.compressor, ts.d_local)
+    st = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (P,) + a.shape), st)
+    fn = jax.jit(jax.vmap(ts.fn, axis_name="data"))
+    for i in range(steps):
+        t = jax.random.randint(jax.random.PRNGKey(100 + i), (P, B, S), 0,
+                               CFG.vocab_size)
+        st, m = fn(st, {"tokens": t, "labels": t})
+        assert np.isfinite(float(m["loss"][0]))
+    _RUNS[key] = (st, ts)
+    return st, ts
+
+
+def _assert_params(a, b, exact=True):
+    for k in a["params"]:
+        if exact:
+            np.testing.assert_array_equal(np.asarray(a["params"][k]),
+                                          np.asarray(b["params"][k]),
+                                          err_msg=k)
+        else:
+            np.testing.assert_allclose(np.asarray(a["params"][k]),
+                                       np.asarray(b["params"][k]),
+                                       rtol=1e-5, atol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Train-step equivalence (acceptance pins)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("buckets,bwd_chunks", [(4, 2), (4, 3), (1, 2)])
+def test_fused_matches_unfused(buckets, bwd_chunks):
+    """Fused partial encodes sum (linearity) to the staged whole-bucket
+    encode — trained parameters must agree with the unfused interleave to
+    float tolerance (fp summation grouping differs across VJP fragments)."""
+    unfused, _ = _run(buckets=buckets, bwd_chunks=bwd_chunks,
+                      k=1024, rows=5, width=2048)
+    fused, ts = _run(buckets=buckets, bwd_chunks=bwd_chunks, fuse_encode=True,
+                     k=1024, rows=5, width=2048)
+    assert ts.fuse_encode is True
+    _assert_params(unfused, fused, exact=False)
+
+
+def test_fused_chunks1_matches_unfused():
+    """One chunk => one fragment per bucket: the fused path degenerates to
+    a single partial encode at offset 0, which IS the staged encode."""
+    unfused, _ = _run(buckets=4, bwd_chunks=1, k=1024, rows=5, width=2048)
+    fused, _ = _run(buckets=4, bwd_chunks=1, fuse_encode=True,
+                    k=1024, rows=5, width=2048)
+    _assert_params(unfused, fused, exact=False)
+
+
+def test_fuse_off_is_the_default_and_deterministic():
+    """fuse_encode=False must be byte-identical to not passing the flag —
+    the pre-PR step is untouched."""
+    a, ts_a = _run(buckets=4, bwd_chunks=2, k=1024, rows=5, width=2048)
+    b, ts_b = _run(buckets=4, bwd_chunks=2, fuse_encode=False, steps=4,
+                   k=1024, rows=5, width=2048)
+    assert ts_a.fuse_encode is False and ts_b.fuse_encode is False
+    # distinct cache keys, same geometry: 3 common steps must agree exactly
+    c, _ = _run(buckets=4, bwd_chunks=2, steps=4, k=1024, rows=5, width=2048)
+    _assert_params(b, c, exact=True)
+
+
+def test_fused_replicas_agree():
+    st, _ = _run(buckets=4, bwd_chunks=3, fuse_encode=True, steps=4,
+                 k=1024, rows=5, width=2048)
+    for v in st["params"].values():
+        assert float(jnp.max(jnp.abs(v - v[0:1]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Compressor stage surface
+# ---------------------------------------------------------------------------
+
+
+def _gs(**kw):
+    from repro.core.compression import make as make_comp
+    return make_comp("gs-sgd", k=256, rows=3, width=512, **kw)
+
+
+def test_stage_encode_partial_merge_equals_whole():
+    c = _gs()
+    g = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    acc = 0.01 * jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    u_w, sk_w = c.stage_encode(acc, g)
+    frags = []
+    for lo, hi in ((0, 1500), (1500, 2000), (2000, 4096)):
+        u_p, sk_p = c.stage_encode_partial(acc[lo:hi], g[lo:hi], lo)
+        frags.append((lo, u_p, sk_p))
+    u_m, sk_m = c.stage_encode_merge(frags)
+    np.testing.assert_array_equal(np.asarray(u_m), np.asarray(u_w))
+    np.testing.assert_allclose(np.asarray(sk_m, dtype=np.float32),
+                               np.asarray(sk_w, dtype=np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_stage_encode_merge_single_fragment_exact():
+    c = _gs()
+    g = jax.random.normal(jax.random.PRNGKey(2), (4096,))
+    acc = jnp.zeros(4096)
+    u_w, sk_w = c.stage_encode(acc, g)
+    u_p, sk_p = c.stage_encode_partial(acc, g, 0)
+    u_m, sk_m = c.stage_encode_merge([(0, u_p, sk_p)])
+    np.testing.assert_array_equal(np.asarray(u_m), np.asarray(u_w))
+    np.testing.assert_array_equal(np.asarray(sk_m), np.asarray(sk_w))
+
+
+def test_stage_encode_merge_rejects_tiling_gap():
+    c = _gs()
+    g = jax.random.normal(jax.random.PRNGKey(3), (4096,))
+    a, sa = c.stage_encode_partial(jnp.zeros(1000), g[:1000], 0)
+    b, sb = c.stage_encode_partial(jnp.zeros(1000), g[1200:2200], 1200)
+    with pytest.raises(ValueError, match="do not tile the bucket"):
+        c.stage_encode_merge([(0, a, sa), (1200, b, sb)])
+
+
+def test_can_fuse_only_exact_encoder():
+    """The 'ts' shifted-window encoder has no offset form — the runtime
+    must fall back to the staged whole-bucket encode for it."""
+    assert _gs().can_fuse is True
+    assert _gs(encoder="ts").can_fuse is False
+
+
+# ---------------------------------------------------------------------------
+# Schedule recurrence + sim pricing
+# ---------------------------------------------------------------------------
+
+
+def test_fused_schedule_reduces_to_unfused_at_one_fragment():
+    t_enc, t_comm, ready = [0.3, 0.5, 0.2], [1.0, 0.8, 1.2], [2.0, 1.0, 3.0]
+    want = comp.interleaved_schedule_time(t_enc, t_comm, ready,
+                                          t_backward=3.0)
+    got = comp.fused_interleaved_schedule_time([0, 1, 2], t_enc, ready,
+                                               t_comm, t_backward=3.0)
+    assert got == want
+
+
+def test_fused_schedule_never_worse_and_strictly_better_when_spanning():
+    """A bucket spanning several VJP chunks encodes its early fragments
+    DURING the backward instead of serially after its last chunk — the
+    fused exposed time can only shrink."""
+    # 2 buckets x heavy encode, bucket 0 spans both chunks
+    ready = [1.0, 0.5]
+    unf = comp.interleaved_schedule_time([0.8, 0.8], [0.1, 0.1], ready,
+                                         t_backward=1.0)
+    pieces = rp.fused_pieces((0, 50), (50, 50), 100, 4)
+    pb = [b for b, _, _ in pieces]
+    pe = [0.8 * frac for _, frac, _ in pieces]
+    ev_t = {3: 0.25, 2: 0.5, 1: 0.75, 0: 1.0}
+    prr = [ev_t[e] for _, _, e in pieces]
+    fus = comp.fused_interleaved_schedule_time(pb, pe, prr, [0.1, 0.1],
+                                               t_backward=1.0)
+    assert fus[2] <= unf[2]          # exposed time
+    assert fus[2] < unf[2]           # strictly: partials hid encode work
+    assert fus[0] == pytest.approx(unf[0])  # serial total unchanged
+
+
+def test_fused_pieces_tile_and_land_on_readiness_events():
+    offsets, sizes, d, k = (0, 40, 100), (40, 60, 156), 256, 3
+    pieces = rp.fused_pieces(offsets, sizes, d, k)
+    ready = rp.bucket_readiness(offsets, sizes, d, k)
+    for b in range(3):
+        frs = [(frac, e) for bb, frac, e in pieces if bb == b]
+        assert sum(f for f, _ in frs) == pytest.approx(1.0)  # tiles bucket
+        # a bucket's LAST fragment (its lowest coords, reverse emission)
+        # lands exactly on its readiness event
+        assert max(e for _, e in frs) == ready[b]
+
+
+def test_step_cost_fused_pricing():
+    net = rp.netm.make_network("flat", link="1gbe")
+    rep = rp.ExchangeReplay("gs-sgd", 1 << 20, buckets=4, k=1024, rows=5,
+                            width=4096)
+    ids = range(8)
+    un = rep.step_cost(net, ids, t_backward=0.5, bwd_chunks=3)
+    fu = rep.step_cost(net, ids, t_backward=0.5, bwd_chunks=3,
+                       fuse_encode=True)
+    assert fu.bytes_wire == un.bytes_wire  # same wire payload
+    assert fu.encode + fu.comm <= un.encode + un.comm + 1e-12
+    # one chunk: fused pricing is IDENTICAL to unfused
+    a = rep.step_cost(net, ids, t_backward=0.5, bwd_chunks=1)
+    b = rep.step_cost(net, ids, t_backward=0.5, bwd_chunks=1,
+                      fuse_encode=True)
+    assert a == b
+
+
+def test_predict_step_and_env_thread_fuse_encode():
+    kw = dict(buckets=4, bwd_chunks=3, k=1024, rows=5, width=4096,
+              t_compute=0.5)
+    un = rp.predict_step("gs-sgd", 1 << 20, 8, **kw)
+    fu = rp.predict_step("gs-sgd", 1 << 20, 8, fuse_encode=True, **kw)
+    assert fu["step_time"] <= un["step_time"] + 1e-12
+    assert Env(p=8, d=1 << 20, fuse_encode=True).fuse_encode is True
+    assert SimConfig(p=8, fuse_encode=True).fuse_encode is True
+
+
+# ---------------------------------------------------------------------------
+# Spec-layer validation + CLI surface
+# ---------------------------------------------------------------------------
+
+
+def _ex(**kw):
+    return dataclasses.replace(api_spec.RunSpec().exchange, **kw)
+
+
+def test_check_exchange_config_rejects_unfusable():
+    with pytest.raises(ValueError, match="backward-interleaved"):
+        api_spec.check_exchange_config(fuse_encode=True, buckets=None,
+                                       bwd_chunks=2)
+    with pytest.raises(ValueError, match="backward-interleaved"):
+        api_spec.check_exchange_config(fuse_encode=True, buckets=4,
+                                       bwd_chunks=None)
+    with pytest.raises(ValueError, match="backward-interleaved"):
+        api_spec.check_exchange_config(fuse_encode=True, buckets=4,
+                                       bwd_chunks=2, overlap=False)
+    with pytest.raises(ValueError, match="gs-sgd"):
+        api_spec.check_exchange_config(fuse_encode=True, buckets=4,
+                                       bwd_chunks=2, compressor="topk")
+    # valid: fused gs-sgd interleave
+    api_spec.check_exchange_config(fuse_encode=True, buckets=4, bwd_chunks=2)
+
+
+def test_train_step_and_spec_raise_through_same_validation():
+    with pytest.raises(ValueError, match="backward-interleaved"):
+        validate_exchange_config(fuse_encode=True, buckets=4, bwd_chunks=None)
+    spec = dataclasses.replace(
+        api_spec.RunSpec(),
+        exchange=_ex(fuse_encode=True, buckets=4, bwd_chunks=None))
+    with pytest.raises(ValueError, match="backward-interleaved"):
+        spec.validate()
+    ok = dataclasses.replace(
+        api_spec.RunSpec(),
+        exchange=_ex(fuse_encode=True, buckets=4, bwd_chunks=2))
+    ok.validate()
+    assert ok.sim_config().fuse_encode is True
+    assert ok.env().fuse_encode is True
+
+
+def test_make_train_step_rejects_fuse_without_interleave():
+    from repro.optim import make as make_opt
+    ma = MeshAxes(tp=1, data=P, tp_axis=None, data_axis="data")
+    with pytest.raises(ValueError, match="backward-interleaved"):
+        make_train_step(CFG, ma, make_opt("adamw", lr=2e-3), dp_mode="dp",
+                        compressor_name="gs-sgd", buckets=4,
+                        bwd_chunks=None, fuse_encode=True)
+
+
+def test_cli_exposes_fuse_encode_flag():
+    for surface in ("train", "sim"):
+        ap = api_cli.build_parser(surface)
+        ns = ap.parse_args(["--fuse-encode"])
+        assert ns.fuse_encode is True
+        ns = ap.parse_args(["--no-fuse-encode"])
+        assert ns.fuse_encode is False
+        ns = ap.parse_args([])
+        assert getattr(ns, "fuse_encode", None) in (None, False)
+    base = api_spec.RunSpec()
+    ap = api_cli.build_parser("train")
+    got = api_cli.apply_args(base, ap.parse_args(
+        ["--fuse-encode", "--buckets", "4", "--bwd-chunks", "2"]), "train")
+    assert got.exchange.fuse_encode is True
+    got.validate()

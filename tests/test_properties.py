@@ -1,0 +1,75 @@
+"""Hypothesis property tests for the sketch stack.
+
+The ONLY file allowed to gate on hypothesis at module scope: everything
+here is generator-driven. The deterministic oracle sweeps these
+generalize live in tests/test_count_sketch.py and tests/test_kernels.py,
+which must collect and run without the dev extras (guarded by
+test_kernels.test_kernel_suite_collects_without_hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import count_sketch as cs  # noqa: E402
+from repro.core.count_sketch import SketchConfig  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.sketch_decode import sketch_decode  # noqa: E402
+from repro.kernels.sketch_encode import sketch_encode  # noqa: E402
+
+CFG = cs.SketchConfig(rows=5, width=512, seed=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=5000),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_linearity_any_shape(d, seed):
+    cfg = cs.SketchConfig(rows=3, width=256, seed=7)
+    key = jax.random.PRNGKey(seed % (2**31))
+    a = jax.random.normal(key, (d,))
+    b = jax.random.normal(jax.random.fold_in(key, 9), (d,))
+    lhs = cs.encode(cfg, a) + cs.encode(cfg, b)
+    rhs = cs.encode(cfg, a + b)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.floats(min_value=-1e3, max_value=1e3,
+                          allow_nan=False), min_size=1, max_size=64))
+def test_property_single_heavy_recovery(vals):
+    """Whatever the tail, a coordinate 50x the tail l2 is recovered."""
+    d = 4096
+    g = jnp.zeros(d).at[:len(vals)].set(jnp.asarray(vals, jnp.float32))
+    tail = float(jnp.linalg.norm(g))
+    g = g.at[2049].set(max(50.0 * tail, 100.0))
+    est = cs.decode(CFG, cs.encode(CFG, g), d)
+    assert int(jnp.argmax(jnp.abs(est))) == 2049
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=3000))
+def test_property_encode_any_d(d):
+    cfg = SketchConfig(rows=3, width=256, seed=8)
+    g = jax.random.normal(jax.random.PRNGKey(d), (d,))
+    out = sketch_encode(cfg, g, interpret=True)
+    want = ref.count_sketch_encode(cfg, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=3000))
+def test_property_decode_any_d(d):
+    cfg = SketchConfig(rows=3, width=256, seed=8)
+    g = jax.random.normal(jax.random.PRNGKey(d + 1), (d,))
+    sk = ref.count_sketch_encode(cfg, g)
+    out = sketch_decode(cfg, sk, d, interpret=True)
+    want = ref.count_sketch_decode(cfg, sk, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
