@@ -222,9 +222,11 @@ def main(argv=None):
               f"({measured['hbm_fraction'] * 100:.1f}% of HBM bound)")
 
     if args.json:
+        from repro.obs import provenance
         with open(args.json, "w") as f:
             json.dump({"mesh": args.mesh, "rows": rows,
-                       "measured_encode": measured}, f, indent=2)
+                       "measured_encode": measured,
+                       "provenance": provenance()}, f, indent=2)
         print(f"wrote {args.json}")
     return rows
 

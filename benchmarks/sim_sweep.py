@@ -156,9 +156,11 @@ def main(argv=None) -> dict:
     print(f"\nexposed exchange s/step @P={p_b} hier, 8 buckets: " + "  ".join(
         f"K={c['bwd_chunks']}:{e:.4f}" for c, e in zip(bwd_sweep, exposed)))
 
+    from repro.obs import provenance
     out = {"cells": cells, "checks": checks,
            "sweep": {"p": ps, "d": ds, "buckets": bks,
-                     "bwd_chunks": [1, 2, 4, 8]}}
+                     "bwd_chunks": [1, 2, 4, 8]},
+           "provenance": provenance()}
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, "BENCH_sim.json")
     with open(path, "w") as f:

@@ -98,6 +98,8 @@ def main(argv=None) -> dict:
            "sweep": {"p": ps, "d": d, "topologies": ["flat", "hier"],
                      "compute_mean": args.compute_mean},
            "grid": grid, "checks": checks}
+    from repro.obs import provenance
+    out["provenance"] = provenance()
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, "BENCH_tune.json")
     with open(path, "w") as f:

@@ -509,6 +509,11 @@ class RunSpec:
     ckpt_every: int = _field(
         20, "--ckpt-every", parse=int, surfaces=("train",),
         help="checkpoint cadence in steps")
+    trace: str | None = _field(
+        None, "--trace", parse=parse_opt_str, surfaces=("train", "sim"),
+        metavar="PATH",
+        help="write a Chrome/Perfetto span trace of the run here "
+             "(repro.obs; 'none' = tracing off, zero overhead)")
     exchange: ExchangeSpec = _field(factory=ExchangeSpec)
     cluster: ClusterSpec = _field(factory=ClusterSpec)
 

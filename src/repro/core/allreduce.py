@@ -24,6 +24,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obtrace
+
 Array = jax.Array
 AxisNames = str | Sequence[str]
 
@@ -76,16 +78,22 @@ def tree_allreduce(x: Array, axis_name: str, p: int) -> Array:
     """Paper Alg. 1 all-reduce of ``x`` over ``axis_name`` (size p)."""
     if p == 1:
         return x
+    tr = obtrace.current()
     sched = reduce_schedule(p)
     # Reduce: receivers accumulate their pair partner's payload.
-    for pairs in sched:
-        received, mask = masked_permute(x, axis_name, pairs, p)
-        x = x + jnp.where(mask, received, jnp.zeros_like(received))
+    for r, pairs in enumerate(sched):
+        with tr.span(f"tree/reduce{r}", cat="comm",
+                     args={"round": r, "pairs": len(pairs)}) as sp:
+            received, mask = masked_permute(x, axis_name, pairs, p)
+            x = sp.sync(x + jnp.where(mask, received,
+                                      jnp.zeros_like(received)))
     # Broadcast back down the same tree (reversed rounds, reversed edges).
-    for pairs in reversed(sched):
+    for r, pairs in enumerate(reversed(sched)):
         back = [(dst, src) for (src, dst) in pairs]
-        received, mask = masked_permute(x, axis_name, back, p)
-        x = jnp.where(mask, received, x)
+        with tr.span(f"tree/bcast{r}", cat="comm",
+                     args={"round": r, "pairs": len(pairs)}) as sp:
+            received, mask = masked_permute(x, axis_name, back, p)
+            x = sp.sync(jnp.where(mask, received, x))
     return x
 
 

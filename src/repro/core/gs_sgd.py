@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compression as comp
+from repro.obs import trace as obtrace
 from repro.models.common import ArchConfig, ShardCtx
 from repro.models.flatten import (SEG_NAMES, BucketPlan, FlatSpec,
                                   bucket_plan, bucket_sizes, make_flat_spec,
@@ -170,22 +171,31 @@ def exchange_bucketed(bc: "comp.BucketedCompressor", ef_state, g_flat,
         return bc.step(ef_state, g_flat, axis=axis, nworkers=nworkers,
                        key=key, **kw)
 
+    tr = obtrace.current()
     parts = bc.spec.split(g_flat)
     keys = [None if key is None else jax.random.fold_in(key, i)
             for i in range(n)]
     us: list = [None] * n
     sks: list = [None] * n
     outs: list = [None] * n
-    us[0], sks[0] = bc.parts[0].stage_encode(ef_state[0], parts[0])
+    with tr.span("encode/b0", cat="encode") as sp:
+        us[0], sks[0] = bc.parts[0].stage_encode(ef_state[0], parts[0])
+        sp.sync(sks[0])
     for i in range(n):
-        sk_sum, scale = bc.parts[i].stage_reduce(
-            sks[i], axis=axis, nworkers=nworkers, include=include)
+        with tr.span(f"allreduce/b{i}", cat="comm") as sp:
+            sk_sum, scale = bc.parts[i].stage_reduce(
+                sks[i], axis=axis, nworkers=nworkers, include=include)
+            sp.sync(sk_sum)
         if i + 1 < n:  # next bucket's encode — independent of the reduce
-            us[i + 1], sks[i + 1] = bc.parts[i + 1].stage_encode(
-                ef_state[i + 1], parts[i + 1])
-        outs[i] = bc.parts[i].stage_recover(
-            us[i], sk_sum, scale, axis=axis, nworkers=nworkers,
-            key=keys[i], include=include)
+            with tr.span(f"encode/b{i + 1}", cat="encode") as sp:
+                us[i + 1], sks[i + 1] = bc.parts[i + 1].stage_encode(
+                    ef_state[i + 1], parts[i + 1])
+                sp.sync(sks[i + 1])
+        with tr.span(f"recover/b{i}", cat="recover") as sp:
+            outs[i] = bc.parts[i].stage_recover(
+                us[i], sk_sum, scale, axis=axis, nworkers=nworkers,
+                key=keys[i], include=include)
+            sp.sync(outs[i][0])
     upd = bc.spec.join([o[0] for o in outs])
     ef_new = tuple(o[1] for o in outs)
     stats = comp.BucketedCommStats(tuple(o[2] for o in outs),
@@ -283,35 +293,49 @@ def exchange_interleaved(bc: "comp.BucketedCompressor", plan: BucketPlan,
     scale: list = [None] * n
     outs: list = [None] * n
     launched: list[int] = []
+    tr = obtrace.current()
 
     def recover(i: int) -> None:
         kb = (key if key is None or n == 1
               else jax.random.fold_in(key, i))
-        outs[i] = parts[i].stage_recover(
-            us[i], sk_sum[i], scale[i], axis=axis, nworkers=nworkers,
-            key=kb, include=include)
+        with tr.span(f"recover/b{i}", cat="recover") as sp:
+            outs[i] = parts[i].stage_recover(
+                us[i], sk_sum[i], scale[i], axis=axis, nworkers=nworkers,
+                key=kb, include=include)
+            sp.sync(outs[i][0])
 
     n_chunks = len(bwd_steps)
     for ev in range(plan.n_events):
         if ev < n_chunks:
-            (a, b), d_cs, d_cr = bwd_steps[ev]()
+            with tr.span(f"backward/chunk{ev}", cat="backward") as sp:
+                (a, b), d_cs, d_cr = bwd_steps[ev]()
+                sp.sync((d_cs, d_cr))
             if d_cs.size:
                 emit(offs["cycles_s"] + a * f_cs, d_cs.reshape(-1))
             if d_cr.size:
                 emit(offs["cycles_r"] + a * f_cr, d_cr.reshape(-1))
         if ev == n_chunks - 1:  # top segments finalize with the last chunk
-            d_ts, d_tr = top_grads()
+            with tr.span("backward/top", cat="backward") as sp:
+                d_ts, d_tr = top_grads()
+                sp.sync((d_ts, d_tr))
             if d_ts.size:
                 emit(offs["top_s"], d_ts.reshape(-1))
             if d_tr.size:
                 emit(offs["top_r"], d_tr.reshape(-1))
         for i in by_event.get(ev, []):
-            if fusable[i]:
-                us[i], sk = parts[i].stage_encode_merge(frags[i])
-            else:
-                us[i], sk = parts[i].stage_encode(ef_state[i], assemble(i))
-            sk_sum[i], scale[i] = parts[i].stage_reduce(
-                sk, axis=axis, nworkers=nworkers, include=include)
+            tr.instant(f"ready/b{i}", cat="encode",
+                       args={"bucket": i, "event": ev})
+            with tr.span(f"encode/b{i}", cat="encode") as sp:
+                if fusable[i]:
+                    us[i], sk = parts[i].stage_encode_merge(frags[i])
+                else:
+                    us[i], sk = parts[i].stage_encode(ef_state[i],
+                                                      assemble(i))
+                sp.sync(sk)
+            with tr.span(f"allreduce/b{i}", cat="comm") as sp:
+                sk_sum[i], scale[i] = parts[i].stage_reduce(
+                    sk, axis=axis, nworkers=nworkers, include=include)
+                sp.sync(sk_sum[i])
             launched.append(i)
             while len(launched) > 1:  # recover, one bucket behind
                 recover(launched.pop(0))
@@ -508,19 +532,26 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
             return inv_tp * mdl.loss_fn(cfg, ctx, fs, p, b, gathers=gathers,
                                         remat=remat)
 
+        tr = obtrace.current()
         b_loc = batch["tokens"].shape[0]
         mb = microbatch or b_loc
         bwd_steps = top_grads = None
         if bwd_chunks is not None:
             # Chunked backward: per-chunk VJPs emit gradient slices in
             # reverse order (seeded with 1/tp, mirroring loss_of's scaling)
-            loss, bwd_steps, top_grads = mdl.chunked_loss_vjp(
-                cfg, ctx, fs, params, batch, chunks=bwd_chunks,
-                gathers=gathers, remat=remat, grad_seed=inv_tp)
+            with tr.span("forward", cat="forward") as sp:
+                loss, bwd_steps, top_grads = mdl.chunked_loss_vjp(
+                    cfg, ctx, fs, params, batch, chunks=bwd_chunks,
+                    gathers=gathers, remat=remat, grad_seed=inv_tp)
+                sp.sync(loss)
             loss = inv_tp * loss
             grads = None
         elif mb >= b_loc:
-            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            # monolithic autodiff: forward and backward are one fused
+            # call, so the span carries both under cat='backward'
+            with tr.span("loss_and_grad", cat="backward") as sp:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+                sp.sync(loss)
         else:
             if b_loc % mb != 0:
                 raise ValueError(
@@ -574,8 +605,11 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                         compressor, ef32, g_flat, axis=comp_axes,
                         nworkers=comp_n, overlap=overlap, **kw)
                 else:
-                    upd, ef_new, _ = compressor.step(
-                        ef32, g_flat, axis=comp_axes, nworkers=comp_n, **kw)
+                    with tr.span("exchange", cat="comm") as sp:
+                        upd, ef_new, _ = compressor.step(
+                            ef32, g_flat, axis=comp_axes, nworkers=comp_n,
+                            **kw)
+                        sp.sync(upd)
             ef_new = jax.tree_util.tree_map(
                 lambda new, old: new.astype(old.dtype), ef_new, ef)
         else:
@@ -600,10 +634,12 @@ def make_train_step(cfg: ArchConfig, ma: MeshAxes, opt: Optimizer, *,
                                           / jnp.maximum(gnorm, 1e-12))
         g_segs = unpack_segs(g_mean, params)
 
-        new_params, new_opt = {}, {}
-        for k in SEG_NAMES:
-            new_params[k], new_opt[k] = opt.apply(params[k], g_segs[k],
-                                                  opt_state[k], step)
+        with tr.span("optimizer", cat="optimizer") as sp:
+            new_params, new_opt = {}, {}
+            for k in SEG_NAMES:
+                new_params[k], new_opt[k] = opt.apply(params[k], g_segs[k],
+                                                      opt_state[k], step)
+            sp.sync(new_params["top_s"])
 
         loss = loss * ma.tp  # undo the grad-seed scaling for reporting
         loss_rep = jax.lax.pmean(loss, ma.dp_axes) if ma.dp_axes else loss

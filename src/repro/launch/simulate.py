@@ -200,6 +200,12 @@ def main(argv=None) -> dict:
     if args.out:
         res.dump(args.out)
         print(f"wrote {args.out}")
+    if spec.trace:
+        from repro import obs
+        doc = res.to_tracer().save(spec.trace, spec=spec,
+                                   provenance=obs.provenance(spec),
+                                   source="sim")
+        print(f"wrote {spec.trace} ({len(doc['traceEvents'])} events)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(curves_json(res), f, indent=1)

@@ -34,12 +34,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro import api
+from repro import api, obs
 from repro import ckpt as ckpt_lib
 from repro.api import RunSpec
 from repro.core.gs_sgd import make_state
@@ -89,6 +90,81 @@ def resolve_spec(args) -> RunSpec:
     return spec
 
 
+def _ef_norm(state, P: int) -> float:
+    """l2 norm of the error-feedback residual (worker 0's copy under vmap)."""
+    tot = 0.0
+    for leaf in jax.tree_util.tree_leaves(state.get("ef", {})):
+        if leaf.size == 0:
+            continue
+        x = leaf[0] if P > 1 else leaf
+        tot += float(jnp.vdot(x, x).real)
+    return math.sqrt(tot)
+
+
+def _predicted(spec: RunSpec) -> dict:
+    """Sim-priced step for the trace@2 ``predicted`` block: the jitter-free
+    ``replay.predict_step`` on this spec's cluster (the pinned single-step
+    oracle), so a trace carries its own sim-vs-measured comparison."""
+    try:
+        from repro.sim import replay
+        cfg = spec.sim_config()
+        r = replay.predict_step(
+            cfg.method, cfg.d, cfg.p, buckets=cfg.buckets,
+            bwd_chunks=cfg.bwd_chunks, k=cfg.k, rows=cfg.rows,
+            width=cfg.width, shape=cfg.shape, topology=cfg.topology,
+            link=cfg.link, intra_link=cfg.intra_link,
+            group_size=cfg.group_size, overlap=cfg.overlap,
+            fuse_encode=cfg.fuse_encode, t_compute=cfg.compute.mean,
+            bwd_frac=cfg.bwd_frac,
+            wire_dtype_bytes=cfg.wire_dtype_bytes,
+            net=spec.cluster.network())
+        return {"step_time": r["step_time"], "exposed_comm": r["comm"],
+                "hidden_comm": max(0.0, r["comm_serial"] - r["comm"]),
+                "encode": r["encode"], "comm": r["comm"],
+                "recover": r["recover"]}
+    except Exception as e:  # the trace is still useful without the oracle
+        return {"error": str(e)}
+
+
+def _recovery_probe(ts, seed: int) -> float | None:
+    """heavymix recovery-error probe on the run's RESOLVED per-bucket
+    sketch geometry: 1 - captured l2 mass on a seeded heavy-tailed probe
+    (the ``tune/cost.py`` error proxy, here measuring the run as built).
+    None for non-sketch compressors."""
+    try:
+        import numpy as np
+
+        from repro.core import compression as comp
+        from repro.core import count_sketch as cs
+        from repro.core import heavymix as hm
+        from repro.tune.cost import probe_gradient
+        if isinstance(ts.compressor, comp.BucketedCompressor):
+            parts = list(zip(ts.compressor.parts, ts.compressor.spec.sizes))
+        else:
+            parts = [(ts.compressor, ts.d_local)]
+        scale = min(1.0, (1 << 14) / max(1, ts.d_local))
+        missed = total = 0.0
+        for i, (c, d_b) in enumerate(parts):
+            if not hasattr(c, "sketch"):
+                return None
+            d_p = max(64, int(round(d_b * scale)))
+            k_p = max(1, min(d_p, int(round(c.k * scale))))
+            w_p = min(int(c.sketch.width), max(64, 1 << int(math.floor(
+                math.log2(max(c.sketch.width * scale, 64))))))
+            u = probe_gradient(d_p, seed=seed + i)
+            cfg = cs.SketchConfig(rows=c.sketch.rows, width=w_p,
+                                  seed=c.sketch.seed)
+            idx, _ = hm.heavymix(cfg, cs.encode(cfg, u), k_p, d_p)
+            tot = float(np.sum(u.astype(np.float64) ** 2))
+            cap = float(np.sum(np.asarray(u)[np.asarray(idx)]
+                               .astype(np.float64) ** 2))
+            missed += max(0.0, tot - cap)
+            total += tot
+        return missed / total if total > 0 else 0.0
+    except Exception:
+        return None
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description="gs-SGD training driver")
     api.add_spec_args(ap, "train")     # every config flag: repro.api.spec
@@ -104,9 +180,11 @@ def main(argv=None) -> dict:
                          "into the base spec (bit-exact vs passing the "
                          "same flags manually)")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write a repro.tune/trace@1 calibration trace: "
-                         "per-step wall time + CommStats (rounds/bytes), "
-                         "consumable by repro.launch.tune --calibrate")
+                    help="write a repro.tune/trace@2 calibration trace "
+                         "(strict superset of trace@1: + warmup tags, "
+                         "quality metrics, provenance), consumable by "
+                         "repro.launch.tune --calibrate; a .jsonl path "
+                         "streams one record per line")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--kill-at", type=int, default=None,
                     help="simulate a crash after this step (tests)")
@@ -149,26 +227,61 @@ def main(argv=None) -> dict:
         from repro.core import compression as comp
         stats = comp.static_comm_stats(ts.compressor, ts.d_local, P)
 
+    # --trace: the ambient repro.obs tracer. Spans cannot fire inside the
+    # jitted step, so the driver runs ONE eager probe step (output
+    # discarded — real-run numerics untouched) under the tracer for phase
+    # attribution, plus cheap wall-clock "step" umbrella spans around every
+    # jitted call. Tracing off → obs.NULL everywhere → the jaxpr and the
+    # step outputs are byte-identical to a build without --trace.
+    tracer = obs.Tracer() if spec.trace else None
+    tnull = tracer if tracer is not None else obs.NULL
+    prov = obs.provenance(spec) if (spec.trace or args.json) else None
+    met = obs.Metrics() if args.json else None
+    probe_at = None
+    if tracer is not None:
+        # probe AFTER the warmup step when the run is long enough, so the
+        # probe's eager dispatch isn't confounded with jit compilation
+        probe_at = start + 1 if spec.steps - start > 1 else start
+
+    def save_trace() -> None:
+        if tracer is None:
+            return
+        doc = tracer.save(spec.trace, spec=spec, provenance=prov,
+                          source="train")
+        print(f"wrote {spec.trace} ({len(doc['traceEvents'])} events)")
+
     def dump_trace() -> None:
-        """repro.tune/trace@1 — per-step wall time + static CommStats, the
-        calibration capture path (repro.launch.tune --calibrate)."""
+        """repro.tune/trace@2 — per-step wall time + static CommStats +
+        warmup tags + quality metrics + provenance; a strict superset of
+        trace@1, consumed unchanged by repro.launch.tune --calibrate."""
         if not args.json:
             return
         ex = spec.exchange
         sk = ex.sketch.resolve(ts.d_local)
-        doc = {"schema": "repro.tune/trace@1",
-               "model": {"arch": cfg.name, "p": P, "d": ts.d_local,
-                         "compressor": ex.compressor,
-                         "buckets": ex.buckets,
-                         "bwd_chunks": ex.bwd_chunks,
-                         "overlap": ex.overlap,
-                         "k": sk.k, "rows": sk.rows,
-                         "width": sk.width, "seed": spec.seed,
-                         "bytes_per_step": stats.bytes_out,
-                         "rounds_per_step": stats.rounds},
-               "records": records}
-        with open(args.json, "w") as f:
-            json.dump(doc, f, indent=1)
+        model = {"arch": cfg.name, "p": P, "d": ts.d_local,
+                 "compressor": ex.compressor,
+                 "buckets": ex.buckets,
+                 "bwd_chunks": ex.bwd_chunks,
+                 "overlap": ex.overlap,
+                 "k": sk.k, "rows": sk.rows,
+                 "width": sk.width, "seed": spec.seed,
+                 "bytes_per_step": stats.bytes_out,
+                 "rounds_per_step": stats.rounds}
+        pred = _predicted(spec)
+        if "step_time" in pred:
+            met.gauge("exposed_comm").set(pred["exposed_comm"])
+            met.gauge("hidden_comm").set(pred["hidden_comm"])
+        per = getattr(stats, "per_bucket", None)
+        if per:   # wire bytes per bucket over the whole capture
+            for i, s in enumerate(per):
+                met.counter(f"bytes_wire/b{i}").inc(
+                    s.bytes_out * P * len(records))
+        err = _recovery_probe(ts, spec.seed)
+        if err is not None:
+            met.gauge("recovery_error_probe").set(err)
+        doc = obs.trace2_doc(model=model, records=records, metrics=met,
+                             provenance=prov, predicted=pred)
+        obs.dump(doc, args.json)
         print(f"wrote {args.json} ({len(records)} records)")
 
     t0 = time.time()
@@ -179,14 +292,40 @@ def main(argv=None) -> dict:
                 lambda a: a.reshape((P, spec.batch // P) + a.shape[1:]), gb)
         else:
             batch = gb
+        if step == probe_at:
+            # eager (un-jitted) replay of this step's inputs: per-phase
+            # spans fire as ops dispatch; the result is DISCARDED, so the
+            # real jitted step below sees bit-identical state
+            probe_fn = (jax.vmap(ts.fn, axis_name="data") if P > 1
+                        else ts.fn)
+            with tracer.activate():
+                with tracer.span("probe", cat="probe",
+                                 args={"step": step}) as sp:
+                    sp.sync(probe_fn(state, batch))
+        warm = step == start
         t_step0 = time.time()
-        state, m = step_fn(state, batch)
-        loss = float(m["loss"][0] if P > 1 else m["loss"])
+        with tnull.span(f"step{step}", cat="step",
+                        args={"step": step, "warmup": warm}):
+            state, m = step_fn(state, batch)
+            loss = float(m["loss"][0] if P > 1 else m["loss"])
+        t_step = time.time() - t_step0
         history.append(loss)
         if args.json:
-            records.append({"step": step, "t_step": time.time() - t_step0,
-                            "loss": loss, "rounds": stats.rounds,
-                            "bytes": stats.bytes_out})
+            bw = stats.bytes_out * P
+            records.append({
+                "step": step, "t_step": t_step, "loss": loss,
+                "rounds": stats.rounds, "bytes": stats.bytes_out,
+                "warmup": warm,
+                "grad_norm": float(m["grad_norm"][0] if P > 1
+                                   else m["grad_norm"]),
+                "ef_residual_norm": _ef_norm(state, P),
+                "bytes_wire": bw,
+                "compression_ratio": (ts.d_local * 4.0 / stats.bytes_out
+                                      if stats.bytes_out else None)})
+            met.counter("bytes_wire").inc(bw)
+            met.counter("rounds").inc(stats.rounds)
+            if not warm:
+                met.histogram("t_step").observe(t_step)
         if step % args.log_every == 0 or step == spec.steps - 1:
             print(f"step {step:5d}  loss {loss:.4f}  "
                   f"({(time.time() - t0):.1f}s)")
@@ -197,11 +336,13 @@ def main(argv=None) -> dict:
             if saver:
                 saver.wait()
             dump_trace()
+            save_trace()
             return {"history": history, "crashed_at": step + 1}
     if saver:
         saver.save(spec.steps, state, {"loss": history[-1]})
         saver.wait()
     dump_trace()
+    save_trace()
     out = {"history": history, "final_loss": history[-1]}
     print(json.dumps({"final_loss": history[-1],
                       "steps": len(history)}))

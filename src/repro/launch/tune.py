@@ -135,6 +135,11 @@ def main(argv=None) -> TunePlan:
                   probe_d=args.probe_d, max_error=args.max_error,
                   spec=spec)
     wall = time.time() - t0
+    # stamp the host identity (jax/backend/hostname/git rev/spec hash) so
+    # a saved plan records where its calibration numbers came from
+    from repro import obs
+    plan = dataclasses.replace(
+        plan, provenance={**plan.provenance, "host": obs.provenance(spec)})
 
     pv = plan.provenance
     print(f"searched {pv['n_evaluated']}/{pv['space_size']} candidates "

@@ -1,0 +1,14 @@
+"""repro.obs — span tracing + metrics + provenance (DESIGN.md §10)."""
+
+from repro.obs import trace
+from repro.obs.metrics import (TRACE2_SCHEMA, Metrics, dump, load_jsonl,
+                               trace2_doc)
+from repro.obs.provenance import provenance, runspec_hash
+from repro.obs.trace import (NULL, PHASES, TRACE_SCHEMA, Tracer, current,
+                             from_sim, validate)
+
+__all__ = [
+    "trace", "Tracer", "current", "from_sim", "validate", "NULL",
+    "PHASES", "TRACE_SCHEMA", "TRACE2_SCHEMA", "Metrics", "trace2_doc",
+    "dump", "load_jsonl", "provenance", "runspec_hash",
+]

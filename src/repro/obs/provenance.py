@@ -1,0 +1,64 @@
+"""One provenance stamp for every artifact (trace@2, TunePlan, BENCH_*).
+
+``provenance(spec)`` answers "what produced this file": jax version +
+backend/device kind, hostname/platform, the repo git revision, and the
+sha256 of the resolved ``RunSpec`` JSON — so two artifacts are comparable
+iff their spec hashes match, regardless of which CLI wrote them. Every
+field is best-effort (``None`` rather than raising) so artifact writing
+never fails on an exotic host.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import platform
+import socket
+import subprocess
+
+SCHEMA = "repro.obs/provenance@1"
+
+_REPO_ROOT = os.path.abspath(
+    os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def runspec_hash(spec) -> str:
+    """sha256 of the canonical resolved-spec JSON (sorted keys)."""
+    doc = spec.to_json() if hasattr(spec, "to_json") else spec
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _git_rev() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "-C", _REPO_ROOT, "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5)
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def provenance(spec=None) -> dict:
+    out: dict = {"schema": SCHEMA}
+    try:
+        import jax
+        out["jax"] = jax.__version__
+        out["backend"] = jax.default_backend()
+        devs = jax.devices()
+        out["device_kind"] = devs[0].device_kind if devs else None
+        out["device_count"] = len(devs)
+    except Exception:
+        out.update(jax=None, backend=None, device_kind=None,
+                   device_count=None)
+    try:
+        out["hostname"] = socket.gethostname()
+    except Exception:
+        out["hostname"] = None
+    out["platform"] = platform.platform()
+    out["python"] = platform.python_version()
+    out["git_rev"] = _git_rev()
+    if spec is not None:
+        out["runspec_sha256"] = runspec_hash(spec)
+    return out

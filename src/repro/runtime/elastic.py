@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import allreduce as ar
+from repro.obs import trace as obtrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,9 +64,15 @@ def replan(plan: ElasticPlan, failed: set[int] | frozenset[int],
     if not survivors:
         raise RuntimeError("all workers failed")
     scale = (len(survivors) / plan.n_workers) if rescale_lr else 1.0
-    return ElasticPlan(
+    new = ElasticPlan(
         n_workers=len(survivors),
         survivor_ids=survivors,
         generation=plan.generation + 1,
         lr_scale=plan.lr_scale * scale,
     )
+    obtrace.current().instant(
+        "elastic.replan", cat="runtime",
+        args={"generation": new.generation, "p": new.n_workers,
+              "failed": sorted(failed), "joined": list(joined),
+              "lr_scale": new.lr_scale})
+    return new

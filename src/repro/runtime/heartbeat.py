@@ -6,6 +6,11 @@ result to ``runtime.elastic.replan``. Pure-python & clock-injectable so the
 tests can simulate failures without real processes; on a real cluster the
 beats would ride the existing coordination channel (e.g. the JAX
 distributed service's KV store).
+
+Detections are observable: the first ``dead()`` call that sees a worker
+cross the timeout emits a ``heartbeat.dead`` instant (worker id, silence
+duration, detection latency past the deadline) through the ambient
+``repro.obs`` tracer — a no-op when no tracer is active.
 """
 
 from __future__ import annotations
@@ -13,21 +18,37 @@ from __future__ import annotations
 import time
 from typing import Callable
 
+from repro.obs import trace as obtrace
+
 
 class HeartbeatMonitor:
     def __init__(self, worker_ids, *, clock: Callable[[], float] = time.time):
         self._clock = clock
         self._last = {w: clock() for w in worker_ids}
+        self._reported: set = set()
 
     def beat(self, worker_id) -> None:
         self._last[worker_id] = self._clock()
+        self._reported.discard(worker_id)
 
     def dead(self, timeout: float) -> set:
         now = self._clock()
-        return {w for w, t in self._last.items() if now - t > timeout}
+        out = {w for w, t in self._last.items() if now - t > timeout}
+        fresh = out - self._reported
+        if fresh:
+            tr = obtrace.current()
+            for w in sorted(fresh, key=repr):
+                silence = now - self._last[w]
+                tr.instant("heartbeat.dead", cat="runtime",
+                           args={"worker": w, "silence": silence,
+                                 "detection_latency": silence - timeout})
+            self._reported |= fresh
+        return out
 
     def remove(self, worker_id) -> None:
         self._last.pop(worker_id, None)
+        self._reported.discard(worker_id)
 
     def add(self, worker_id) -> None:
         self._last[worker_id] = self._clock()
+        self._reported.discard(worker_id)

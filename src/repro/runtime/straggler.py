@@ -21,6 +21,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import trace as obtrace
+
 
 @dataclasses.dataclass
 class DeadlinePolicy:
@@ -57,4 +59,11 @@ class DeadlinePolicy:
             order = np.argsort(d)
             include = np.zeros(len(d), bool)
             include[order[:len(d) - max_drop]] = True
+        if not include.all():
+            # positions are caller-relative (the caller maps them to
+            # worker ids); the deadline is the policy's decision boundary
+            obtrace.current().instant(
+                "straggler.drop", cat="runtime",
+                args={"dropped": [int(i) for i in np.nonzero(~include)[0]],
+                      "deadline": float(self.factor * max(med, 1e-9))})
         return include

@@ -140,6 +140,13 @@ class SimResult:
         with open(path, "w") as f:
             json.dump(self.to_json(), f, indent=1)
 
+    def to_tracer(self):
+        """Render the timeline as a ``repro.obs`` Tracer emitting the SAME
+        span schema as an instrumented train run (DESIGN.md §10) — export
+        with ``.save(path, source='sim')``."""
+        from repro.obs import trace as obtrace
+        return obtrace.from_sim(self)
+
 
 def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
              net: NetworkModel | None = None) -> SimResult:

@@ -350,6 +350,7 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
                  group_size: int = 8, overlap: bool = True,
                  fuse_encode: bool = False,
                  t_compute: float = 0.1, bwd_frac: float = 2 / 3,
+                 wire_dtype_bytes: int = 4,
                  net: netm.NetworkModel | None = None,
                  replay: "ExchangeReplay | None" = None) -> dict:
     """One-call candidate pricing — the auto-tuner's replay entry point.
@@ -374,7 +375,8 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
                                    group_size=group_size, intra=intra_link)
     rep = replay if replay is not None else ExchangeReplay(
         method, d, buckets=buckets, k=k, rows=rows, width=width,
-        shape=shape, group_size=group_size)
+        shape=shape, group_size=group_size,
+        wire_dtype_bytes=wire_dtype_bytes)
     ids = list(range(p))
     interleave = bwd_chunks > 1 and overlap
     t_bwd = t_compute * bwd_frac if interleave else 0.0

@@ -17,7 +17,10 @@ Trace JSON schema (``repro.tune/trace@1``, documented in DESIGN.md §8):
 
 Both launchers emit it: ``repro.launch.train --json PATH`` (records with
 t_step/rounds/bytes measured on a REAL run — the zero-extra-tooling
-capture path) and ``repro.launch.simulate --json PATH`` (the
+capture path; since PR 7 the document is ``repro.tune/trace@2``, a strict
+superset whose records additionally carry ``warmup`` tags and quality
+metrics — consumed here unchanged, and the tags replace the positional
+``drop_first`` heuristic) and ``repro.launch.simulate --json PATH`` (the
 ``curves_json`` shape, accepted here as-is for sim-to-sim calibration
 checks). ``alpha`` and ``beta`` are only identifiable when the trace
 varies rounds/bytes — capture runs at two or three bucket counts (or
@@ -77,8 +80,21 @@ def _normalize(doc: dict) -> list[dict]:
 
 
 def load_trace(path: str) -> list[dict]:
+    if path.endswith(".jsonl"):        # trace@2 streaming layout
+        from repro.obs.metrics import load_jsonl
+        return _normalize(load_jsonl(path))
     with open(path) as f:
         return _normalize(json.load(f))
+
+
+def _drop_warmup(records: list[dict], drop_first: int) -> list[dict]:
+    """Warmup policy for one trace: trace@2 records carry authoritative
+    ``warmup`` tags (train tags the jit-compiling step(s)); when present
+    they REPLACE the positional drop_first heuristic. Untagged (trace@1)
+    records keep the old behavior: drop the first ``drop_first`` rows."""
+    if any("warmup" in r for r in records):
+        return [r for r in records if not r.get("warmup")]
+    return list(records)[drop_first:]
 
 
 def fit(traces, *, drop_first: int = 1) -> Calibration:
@@ -87,7 +103,8 @@ def fit(traces, *, drop_first: int = 1) -> Calibration:
     traces: a record list, or a list of record lists (merge runs captured
     at different bucket counts to make alpha/beta identifiable).
     drop_first: records dropped from the head of EACH trace (jit warmup
-    pollutes the first measured step of a real run).
+    pollutes the first measured step of a real run); ignored for traces
+    whose records carry explicit ``warmup`` tags (trace@2).
     """
     if isinstance(traces, dict):       # a whole trace document
         traces = [_normalize(traces)]
@@ -96,7 +113,7 @@ def fit(traces, *, drop_first: int = 1) -> Calibration:
             traces = [_normalize(t) for t in traces]   # list of documents
         else:
             traces = [traces]                          # one record list
-    recs = [r for t in traces for r in list(t)[drop_first:]]
+    recs = [r for t in traces for r in _drop_warmup(list(t), drop_first)]
     if len(recs) < 3:
         raise ValueError(f"need >= 3 records after warmup drop, got "
                          f"{len(recs)}")
