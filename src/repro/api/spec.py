@@ -115,6 +115,10 @@ def parse_opt_str(s: str):
     return EXPLICIT_NONE if s.lower() in ("none", "") else s
 
 
+def parse_opt_float(s: str):
+    return EXPLICIT_NONE if s.lower() in ("none", "") else float(s)
+
+
 def parse_slow_workers(s: str) -> dict[int, float]:
     """``'ID:FACTOR,ID:FACTOR'`` -> {worker_id: slowdown_factor}."""
     out: dict[int, float] = {}
@@ -391,6 +395,12 @@ class ClusterSpec:
     max_drop_frac: float = _field(
         0.25, "--max-drop-frac", parse=float, surfaces=("sim",),
         help="max fraction of workers the straggler policy may drop")
+    participation: float | None = _field(
+        None, "--participation", parse=parse_opt_float,
+        surfaces=("sim", "tune"), metavar="FRAC",
+        help="per-step client participation fraction in (0, 1]; each step "
+             "samples a max(1, round(FRAC*P)) cohort counter-based per "
+             "(seed, step) ('none' = full participation)")
     rescale_lr: bool = True
     compute_mean: float = _field(
         0.1, "--compute-mean", parse=float, surfaces=("sim", "tune"),
@@ -428,6 +438,10 @@ class ClusterSpec:
             if factor <= 0:
                 raise ValueError(f"slow-worker factor for worker {w} must "
                                  f"be > 0, got {factor}")
+        if self.participation is not None and not (
+                0.0 < self.participation <= 1.0):
+            raise ValueError(f"participation must be in (0, 1], got "
+                             f"{self.participation}")
 
     def link_spec(self):
         """Eq. 1 LinkSpec for the (inter-group) link, calibrated overrides
@@ -620,7 +634,8 @@ class RunSpec:
             heartbeat_timeout=cl.heartbeat_timeout,
             drop_stragglers=cl.drop_stragglers,
             deadline_factor=cl.deadline_factor,
-            max_drop_frac=cl.max_drop_frac, rescale_lr=cl.rescale_lr,
+            max_drop_frac=cl.max_drop_frac,
+            participation=cl.participation, rescale_lr=cl.rescale_lr,
             slow_workers=dict(cl.slow_workers), seed=self.seed,
             wire_dtype_bytes=WIRE_DTYPES[ex.wire_dtype])
 
@@ -633,7 +648,8 @@ class RunSpec:
                    group_size=cl.group_size, t_compute=cl.compute_mean,
                    bwd_frac=cl.bwd_frac, microbatch=self.exchange.microbatch,
                    fuse_encode=self.exchange.fuse_encode,
-                   link_alpha=cl.link_alpha, link_beta=cl.link_beta)
+                   link_alpha=cl.link_alpha, link_beta=cl.link_beta,
+                   participation=cl.participation)
 
     @classmethod
     def from_env(cls, env) -> "RunSpec":
@@ -652,4 +668,5 @@ class RunSpec:
                 intra_link=env.intra_link, group_size=int(env.group_size),
                 compute_mean=float(env.t_compute),
                 bwd_frac=float(env.bwd_frac),
-                link_alpha=env.link_alpha, link_beta=env.link_beta))
+                link_alpha=env.link_alpha, link_beta=env.link_beta,
+                participation=env.participation))

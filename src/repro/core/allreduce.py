@@ -18,11 +18,13 @@ simulation and under ``jax.shard_map`` on real meshes.
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.obs import trace as obtrace
 
@@ -45,6 +47,31 @@ def reduce_schedule(p: int) -> list[list[tuple[int, int]]]:
         rounds.append(pairs)
         active = paired[::2] + parked
     return rounds
+
+
+@functools.lru_cache(maxsize=None)
+def reduce_schedule_arrays(p: int) -> tuple[tuple[np.ndarray, np.ndarray], ...]:
+    """``reduce_schedule(p)`` as per-round ``(src_ranks, dst_ranks)`` int64
+    array pairs — the same pairing, same round order, same parking rule
+    (pinned against the list form in tests), built without the O(P log P)
+    python pair lists. Cached: the simulator re-walks the schedule for
+    every membership generation and every bucket, and at P=100k the list
+    form alone costs hundreds of milliseconds per walk.
+
+    The returned arrays are shared across callers (lru_cache) and marked
+    read-only.
+    """
+    rounds: list[tuple[np.ndarray, np.ndarray]] = []
+    active = np.arange(p, dtype=np.int64)
+    while active.size > 1:
+        m = int(active.size) & ~1          # parked tail stays out of round
+        src = active[1:m:2].copy()
+        dst = active[0:m:2].copy()
+        src.setflags(write=False)
+        dst.setflags(write=False)
+        rounds.append((src, dst))
+        active = np.concatenate([active[0:m:2], active[m:]])
+    return tuple(rounds)
 
 
 def _complete_perm(pairs: list[tuple[int, int]], p: int) -> list[tuple[int, int]]:

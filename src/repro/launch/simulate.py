@@ -21,6 +21,9 @@ Examples:
       "fail_rate=0.05,rejoin_after=20" --out experiments/sim_512.json
   PYTHONPATH=src python -m repro.launch.simulate --p 64 \
       --slow-workers 3:10,7:2.5 --steps 20
+  PYTHONPATH=src python -m repro.launch.simulate --p 100000 --steps 50 \
+      --participation 0.01 --synthetic-faults \
+      "fail_rate=0.5,straggle_rate=0.5,rejoin_after=5"
 """
 
 from __future__ import annotations
@@ -92,12 +95,14 @@ def curves_json(res) -> dict:
              "group_size": cfg.group_size, "overlap": cfg.overlap,
              "k": cfg.k, "rows": cfg.rows, "width": cfg.width,
              "wire_dtype_bytes": cfg.wire_dtype_bytes,
+             "participation": cfg.participation,
              "seed": cfg.seed}
     curves = [{"method": cfg.method, "step": r.step, "p": r.p,
                "generation": r.generation, "bytes": r.bytes_critical,
                "bytes_wire": r.bytes_wire, "rounds": r.rounds,
                "compute": r.compute, "stall": r.stall, "encode": r.encode,
                "comm": r.comm, "recover": r.recover, "time_sim": r.total,
+               "sampled": r.sampled,
                "dropped": list(r.dropped)} for r in res.records]
     return {"model": model, "methods": [cfg.method], "curves": curves,
             "totals": res.totals(), "replans": res.replans, "checks": {}}
@@ -124,6 +129,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--synthetic-faults", default=None, metavar="KV",
                     help="generate a seeded trace, e.g. "
                          "'fail_rate=0.05,straggle_rate=0.1,rejoin_after=20'")
+    ap.add_argument("--engine", default="batched",
+                    choices=("batched", "loop"),
+                    help="sim engine: 'batched' (vectorized, the P=100k "
+                         "path) or 'loop' (per-worker compat reference); "
+                         "pinned identical in tests")
     ap.add_argument("--out", default=None, help="write full JSON result here")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write machine-readable curves JSON (same shape "
@@ -182,7 +192,7 @@ def main(argv=None) -> dict:
     net = spec.cluster.network()
 
     t0 = time.time()
-    res = simulate(cfg, trace, net=net)
+    res = simulate(cfg, trace, net=net, engine=args.engine)
     wall = time.time() - t0
     tot = res.totals()
     print(f"simulated P={p} d={cfg.d:.2e} {cfg.method} "

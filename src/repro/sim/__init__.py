@@ -11,11 +11,13 @@ sources of truth with the JAX execution path (DESIGN.md §6):
     replay.py   — exchange pricing from the real compressors + the real
                   ``overlap_schedule_time`` bucket-pipeline recurrence
     cluster.py  — the timeline: real HeartbeatMonitor / ElasticPlan /
-                  DeadlinePolicy driven by simulated time
+                  DeadlinePolicy driven by simulated time; two pinned-
+                  identical engines ('batched' vectorized / 'loop' compat)
 """
 
-from repro.sim.cluster import SimConfig, SimResult, StepRecord, simulate
-from repro.sim.engine import EventLoop
+from repro.sim.cluster import (SimConfig, SimResult, StepRecord,
+                               sample_cohort, simulate)
+from repro.sim.engine import BatchedEventLoop, EventLoop
 from repro.sim.network import (LINK_1GBE, LINK_10GBE, LINK_ICI, Heterogeneous,
                                Hierarchical, Homogeneous, LinkSpec,
                                NetworkModel, RoundCost, allreduce_cost,
@@ -28,7 +30,8 @@ from repro.sim.traces import FaultTrace, TraceEvent, synthetic
 from repro.sim.workers import ComputeModel
 
 __all__ = [
-    "SimConfig", "SimResult", "StepRecord", "simulate", "EventLoop",
+    "SimConfig", "SimResult", "StepRecord", "simulate", "sample_cohort",
+    "EventLoop", "BatchedEventLoop",
     "LinkSpec", "NetworkModel", "Homogeneous", "Hierarchical",
     "Heterogeneous", "RoundCost", "LINK_1GBE", "LINK_10GBE", "LINK_ICI",
     "make_network", "pairwise_rounds", "tree_allreduce_cost",

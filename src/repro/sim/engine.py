@@ -18,6 +18,8 @@ from __future__ import annotations
 import heapq
 from typing import Callable
 
+import numpy as np
+
 Callback = Callable[["EventLoop"], None]
 
 
@@ -57,3 +59,31 @@ class EventLoop:
         if until is not None:
             self.now = max(self.now, until)
         return self.now
+
+
+class BatchedEventLoop(EventLoop):
+    """``EventLoop`` + ``at_array``: an array of deadlines becomes one heap
+    entry per UNIQUE timestamp instead of one per element — the batched
+    event queue the vectorized cluster engine schedules detection sweeps
+    on. Same clock, same insertion-order tie-breaking, so a batched
+    timeline and a per-event timeline replay identically when their event
+    times coincide."""
+
+    def at_array(self, times, fn: Callable[["EventLoop", np.ndarray], None]
+                 ) -> None:
+        """Schedule ``fn(loop, idx)`` once per unique timestamp in
+        ``times`` (ascending); ``idx`` holds the positions in ``times``
+        that share the firing timestamp. Callbacks are expected to
+        validate against current state — a batch scheduled for a deadline
+        that a replan already resolved must no-op, not re-fire."""
+        times = np.asarray(times, dtype=np.float64)
+        if times.size == 0:
+            return
+        order = np.argsort(times, kind="stable")
+        st = times[order]
+        starts = np.flatnonzero(np.r_[True, st[1:] != st[:-1]])
+        bounds = np.r_[starts, st.size]
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            idx = order[a:b]
+            self.at(float(st[a]),
+                    (lambda group: lambda lp: fn(lp, group))(idx))

@@ -36,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from repro.core import allreduce as ar
 
 
@@ -59,7 +61,13 @@ PRESETS = {"1gbe": LINK_1GBE, "10gbe": LINK_10GBE, "ici": LINK_ICI}
 
 
 class NetworkModel:
-    """Base: price a transfer between two worker ids."""
+    """Base: price a transfer between two worker ids.
+
+    Subclasses override the vectorized ``pair_specs`` (per-pair alpha/beta
+    arrays) so whole collective rounds are priced with array ops; the base
+    class falls back to the per-pair ``link`` loop — the seed-fidelity
+    path ``benchmarks/sim_scale.py`` uses as its baseline cost model.
+    """
 
     def link(self, src: int, dst: int) -> LinkSpec:
         raise NotImplementedError
@@ -67,11 +75,37 @@ class NetworkModel:
     def transfer(self, src: int, dst: int, nbytes: float) -> float:
         return self.link(src, dst).time(nbytes)
 
+    def pair_specs(self, src: np.ndarray, dst: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """(alpha, beta) arrays for the pairwise links src[i] -> dst[i]."""
+        alphas = np.empty(len(src), dtype=np.float64)
+        betas = np.empty(len(src), dtype=np.float64)
+        for i, (s, d) in enumerate(zip(src, dst)):
+            ln = self.link(s, d)
+            alphas[i] = ln.alpha
+            betas[i] = ln.beta
+        return alphas, betas
+
+    def pair_times(self, src: np.ndarray, dst: np.ndarray,
+                   nbytes: float) -> np.ndarray:
+        """Eq. 1 times of the pairwise transfers src[i] -> dst[i] — the
+        same per-element ``alpha + nbytes * beta`` as ``LinkSpec.time``."""
+        a, b = self.pair_specs(src, dst)
+        return a + nbytes * b
+
+    def pair_times_max(self, src: np.ndarray, dst: np.ndarray,
+                       nbytes: float) -> float:
+        """Slowest pairwise transfer (a concurrent round's duration).
+        Subclasses with few link classes answer in O(1)."""
+        if len(src) == 0:
+            return 0.0
+        return float(np.max(self.pair_times(src, dst, nbytes)))
+
     def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
         """Slowest link among the given workers for an ``nbytes`` payload
         (alpha-bound when 0). O(n^2) generic fallback; subclasses override
         with O(1)/O(n) answers — this sits inside the per-step replay loop
-        at P=4096."""
+        at P=100k."""
         worst = LinkSpec(0.0, 0.0)
         for s in ids:
             for d in ids:
@@ -90,6 +124,16 @@ class Homogeneous(NetworkModel):
     def link(self, src: int, dst: int) -> LinkSpec:
         return self.spec
 
+    def pair_specs(self, src: np.ndarray, dst: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        n = len(src)
+        return (np.full(n, self.spec.alpha), np.full(n, self.spec.beta))
+
+    def pair_times_max(self, src: np.ndarray, dst: np.ndarray,
+                       nbytes: float) -> float:
+        # every pair rides the same link — O(1) regardless of round width
+        return self.spec.time(nbytes) if len(src) else 0.0
+
     def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
         return self.spec
 
@@ -107,9 +151,33 @@ class Hierarchical(NetworkModel):
             return self.intra
         return self.inter
 
+    def pair_specs(self, src: np.ndarray, dst: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        same = (np.asarray(src) // self.group_size
+                == np.asarray(dst) // self.group_size)
+        return (np.where(same, self.intra.alpha, self.inter.alpha),
+                np.where(same, self.intra.beta, self.inter.beta))
+
+    def pair_times_max(self, src: np.ndarray, dst: np.ndarray,
+                       nbytes: float) -> float:
+        if len(src) == 0:
+            return 0.0
+        same = (np.asarray(src) // self.group_size
+                == np.asarray(dst) // self.group_size)
+        # max over the (at most two) link classes present in the round —
+        # identical to the per-pair max since pairs within a class tie
+        times = []
+        if bool(same.any()):
+            times.append(self.intra.time(nbytes))
+        if not bool(same.all()):
+            times.append(self.inter.time(nbytes))
+        return max(times)
+
     def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
-        groups = {w // self.group_size for w in ids}
-        return self.inter if len(groups) > 1 else self.intra
+        ids = np.asarray(ids)
+        groups = ids // self.group_size
+        multi = ids.size > 0 and bool(np.any(groups != groups.flat[0]))
+        return self.inter if multi else self.intra
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,9 +196,26 @@ class Heterogeneous(NetworkModel):
         ln = self.base.link(src, dst)
         return LinkSpec(ln.alpha * f, ln.beta * f) if f != 1.0 else ln
 
+    def _factors_of(self, ids: np.ndarray) -> np.ndarray:
+        # factor maps are sparse (a handful of slow workers): one
+        # vectorized mask assignment per entry beats a per-id dict walk
+        out = np.ones(len(ids), dtype=np.float64)
+        for w, f in self.factors.items():
+            out[np.asarray(ids) == w] = f
+        return out
+
+    def pair_specs(self, src: np.ndarray, dst: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        f = np.maximum(self._factors_of(src), self._factors_of(dst))
+        a, b = self.base.pair_specs(src, dst)
+        # stretch alpha and beta separately — (a*f) + n*(b*f) is what
+        # ``link().time()`` computes; (a + n*b)*f rounds differently
+        return a * f, b * f
+
     def worst_link(self, ids: Sequence[int], nbytes: float = 0.0) -> LinkSpec:
         # upper bound: worst base link stretched by the worst factor present
-        f = max((self.factors.get(w, 1.0) for w in ids), default=1.0)
+        ids = np.asarray(ids)
+        f = float(np.max(self._factors_of(ids))) if ids.size else 1.0
         ln = self.base.worst_link(ids, nbytes)
         return LinkSpec(ln.alpha * f, ln.beta * f)
 
@@ -195,13 +280,24 @@ def tree_allreduce_cost(net: NetworkModel, ids: Sequence[int],
 
     Round count is ``len(sched) * 2`` = ``ar.tree_allreduce_rounds(p)`` =
     2⌈log2 p⌉ for any p (parking included) — asserted in tests/test_sim.py.
+    Walks ``reduce_schedule_arrays`` (pinned identical to the pair-list
+    form) so each round prices as one vectorized ``pair_times_max``.
     """
     p = len(ids)
     if p <= 1:
         return []
-    sched = ar.reduce_schedule(p)
-    back = [[(d, s) for (s, d) in pairs] for pairs in reversed(sched)]
-    return pairwise_rounds(net, ids, list(sched) + back, nbytes)
+    ids_arr = np.asarray(ids, dtype=np.int64)
+    sched = ar.reduce_schedule_arrays(p)
+    out = []
+    for src, dst in sched:                       # reduce wave
+        out.append(RoundCost(net.pair_times_max(ids_arr[src], ids_arr[dst],
+                                                nbytes),
+                             nbytes * int(src.size), nbytes))
+    for src, dst in reversed(sched):             # broadcast: transposed
+        out.append(RoundCost(net.pair_times_max(ids_arr[dst], ids_arr[src],
+                                                nbytes),
+                             nbytes * int(src.size), nbytes))
+    return out
 
 
 def ring_allreduce_cost(net: NetworkModel, ids: Sequence[int],
@@ -213,8 +309,9 @@ def ring_allreduce_cost(net: NetworkModel, ids: Sequence[int],
     if p <= 1:
         return []
     chunk = nbytes / p
-    dur = max(net.transfer(ids[i], ids[(i + 1) % p], chunk)
-              for i in range(p))  # every round walks the same ring
+    ids_arr = np.asarray(ids, dtype=np.int64)
+    # every round walks the same ring: one vectorized max over neighbors
+    dur = net.pair_times_max(ids_arr, np.roll(ids_arr, -1), chunk)
     return [RoundCost(dur, chunk * p, chunk)] * (2 * (p - 1))
 
 
@@ -226,41 +323,70 @@ def ps_gather_cost(net: NetworkModel, ids: Sequence[int], nbytes: float,
     which is exactly the O(P) rounds/bytes hotspot ``SketchedSGD``'s
     CommStats charges (rounds = P) and the paper's Sec. III-B contrasts
     with the tree."""
-    srv = ids[server_rank]
-    return [RoundCost(net.transfer(w, srv, nbytes), nbytes, nbytes)
-            for w in ids if w != srv]
+    ids_arr = np.asarray(ids, dtype=np.int64)
+    srv = ids_arr[server_rank]
+    others = ids_arr[ids_arr != srv]
+    times = net.pair_times(others, np.full(others.size, srv), nbytes)
+    return [RoundCost(float(t), nbytes, nbytes) for t in times]
 
 
 def hierarchical_allreduce_cost(net: NetworkModel, ids: Sequence[int],
                                 nbytes: float,
                                 group_size: int) -> list[RoundCost]:
     """Two-level composite: per-group Alg. 1 reduce (groups concurrent),
-    Alg. 1 all-reduce over group leaders, per-group broadcast back."""
+    Alg. 1 all-reduce over group leaders, per-group broadcast back.
+
+    Concurrent same-depth group rounds merge into one ``RoundCost`` (max
+    duration / summed fabric bytes / max critical bytes). All full groups
+    share one ``reduce_schedule_arrays(group_size)``, so a whole wave
+    round is a single vectorized ``pair_times`` over an (n_groups, q)
+    id matrix instead of a python walk per group.
+    """
     p = len(ids)
     if p <= 1:
         return []
-    groups = [list(ids[i:i + group_size]) for i in range(0, p, group_size)]
-    leaders = [g[0] for g in groups]
+    ids_arr = np.asarray(ids, dtype=np.int64)
+    gs = int(group_size)
+    n_full, rem = p // gs, p % gs
+    full = ids_arr[:n_full * gs].reshape(n_full, gs)
+    rem_ids = ids_arr[n_full * gs:]
+    leaders = ids_arr[::gs]
+    sched_full = ar.reduce_schedule_arrays(gs) if n_full else ()
+    sched_rem = ar.reduce_schedule_arrays(rem) if rem > 1 else ()
+    depth = max(len(sched_full) if n_full else 0, len(sched_rem))
 
-    def merge_concurrent(per_group: list[list[RoundCost]]) -> list[RoundCost]:
-        depth = max((len(r) for r in per_group), default=0)
+    def wave(forward: bool) -> list[RoundCost]:
+        # broadcast rounds are each group's reversed/transposed schedule;
+        # shorter (remainder-group) waves align at the FRONT of the merged
+        # wave, exactly like the per-group list merge they replace
         out = []
         for i in range(depth):
-            rs = [r[i] for r in per_group if i < len(r)]
-            out.append(RoundCost(max(r.duration for r in rs),
-                                 sum(r.bytes_wire for r in rs),
-                                 max(r.bytes_critical for r in rs)))
+            durs = []
+            wire = 0.0
+            crit = 0.0
+            if n_full and i < len(sched_full):
+                s, d = (sched_full[i] if forward
+                        else sched_full[len(sched_full) - 1 - i])
+                src, dst = (s, d) if forward else (d, s)
+                t = net.pair_times(full[:, src].ravel(),
+                                   full[:, dst].ravel(), nbytes)
+                durs.append(float(np.max(t)))
+                wire += nbytes * int(src.size) * n_full
+                crit = nbytes
+            if i < len(sched_rem):
+                s, d = (sched_rem[i] if forward
+                        else sched_rem[len(sched_rem) - 1 - i])
+                src, dst = (s, d) if forward else (d, s)
+                durs.append(net.pair_times_max(rem_ids[src], rem_ids[dst],
+                                               nbytes))
+                wire += nbytes * int(src.size)
+                crit = nbytes
+            out.append(RoundCost(max(durs), wire, crit))
         return out
 
-    reduce_waves, bcast_waves = [], []
-    for g in groups:
-        sched = ar.reduce_schedule(len(g))
-        reduce_waves.append(pairwise_rounds(net, g, sched, nbytes))
-        back = [[(d, s) for (s, d) in pairs] for pairs in reversed(sched)]
-        bcast_waves.append(pairwise_rounds(net, g, back, nbytes))
-    return (merge_concurrent(reduce_waves)
+    return (wave(forward=True)
             + tree_allreduce_cost(net, leaders, nbytes)
-            + merge_concurrent(bcast_waves))
+            + wave(forward=False))
 
 
 def allreduce_cost(net: NetworkModel, ids: Sequence[int], nbytes: float, *,

@@ -37,6 +37,8 @@ import dataclasses
 import math
 from typing import Sequence
 
+import numpy as np
+
 from repro.core import compression as comp
 from repro.sim import network as netm
 
@@ -241,10 +243,12 @@ class ExchangeReplay:
         sk_bytes = c.sketch.size * self.wire
         if self.method == "sketched-sgd":
             gather = netm.ps_gather_cost(net, ids, sk_bytes)
+            arr = np.asarray(ids, dtype=np.int64)
+            others = arr[arr != arr[0]]
             bcast = [netm.RoundCost(
-                max(net.transfer(ids[0], w, sk_bytes)
-                    for w in ids if w != ids[0]), sk_bytes * (p - 1),
-                sk_bytes)]
+                net.pair_times_max(np.full(others.size, arr[0]), others,
+                                   sk_bytes),
+                sk_bytes * (p - 1), sk_bytes)]
             return gather + bcast + self._second_round(net, ids, c.k)
         # gs-sgd: sketch all-reduce on the configured shape + second round
         rounds = netm.allreduce_cost(net, ids, sk_bytes, shape=self.shape,
@@ -271,8 +275,12 @@ class ExchangeReplay:
         collective schedules over the topology); it depends only on the
         live-id list, so callers (``sim/cluster.py``) cache it per
         membership and re-run only the cheap ``step_cost`` recurrence when
-        the backward duration varies step-to-step (compute jitter)."""
-        ids = list(ids)
+        the backward duration varies step-to-step (compute jitter). The
+        sim caches by ``plan.generation`` (1:1 with membership); under
+        participation sampling the cohort changes per step, so it prices
+        fresh — ids arrive as arrays and every collective walk is
+        vectorized, keeping that path viable at P=100k."""
+        ids = np.asarray(ids, dtype=np.int64)
         t_enc, t_comm, t_rec = [], [], []
         b_wire = b_crit = 0.0
         n_rounds = 0
@@ -351,6 +359,7 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
                  fuse_encode: bool = False,
                  t_compute: float = 0.1, bwd_frac: float = 2 / 3,
                  wire_dtype_bytes: int = 4,
+                 participation: float | None = None,
                  net: netm.NetworkModel | None = None,
                  replay: "ExchangeReplay | None" = None) -> dict:
     """One-call candidate pricing — the auto-tuner's replay entry point.
@@ -361,9 +370,12 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
     exactly what ``sim/cluster.simulate`` charges per step with zero
     compute jitter and no faults (barrier == ``t_compute``), so a
     ``repro.tune`` prediction and a full event-loop run agree on the
-    configs the tuner ranks. ``net``/``replay`` accept prebuilt objects so
-    a sweep over many candidates reuses the network (and a sweep over
-    backward depths reuses the schedule walk).
+    configs the tuner ranks. ``participation`` prices the steady-state
+    cohort instead — a collective over ``max(1, round(f·p))`` workers, the
+    per-step geometry of a partial-participation run (``p_eff`` in the
+    output records what was priced). ``net``/``replay`` accept prebuilt
+    objects so a sweep over many candidates reuses the network (and a
+    sweep over backward depths reuses the schedule walk).
 
     Returns a plain dict: ``step_time`` (compute + exposed exchange),
     ``exposed_comm`` (encode + comm overhang the schedule could not hide),
@@ -377,13 +389,15 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
         method, d, buckets=buckets, k=k, rows=rows, width=width,
         shape=shape, group_size=group_size,
         wire_dtype_bytes=wire_dtype_bytes)
-    ids = list(range(p))
+    p_eff = p if participation is None else max(1, int(round(participation * p)))
+    ids = list(range(p_eff))
     interleave = bwd_chunks > 1 and overlap
     t_bwd = t_compute * bwd_frac if interleave else 0.0
     pc = rep.step_cost(net, ids, overlap=overlap, t_backward=t_bwd,
                        bwd_chunks=bwd_chunks, fuse_encode=fuse_encode)
     return {
         "step_time": t_compute + pc.total,
+        "p_eff": p_eff,
         "exposed_comm": pc.encode + pc.comm,
         "encode": pc.encode, "comm": pc.comm, "recover": pc.recover,
         "comm_serial": pc.comm_serial,

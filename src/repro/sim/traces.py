@@ -48,7 +48,18 @@ class FaultTrace:
     events: tuple[TraceEvent, ...] = ()
 
     def at(self, step: int) -> list[TraceEvent]:
-        return [e for e in self.events if e.step == step]
+        """Events for one step, in insertion order. O(1) per lookup: the
+        per-step index is built lazily once (stashed in ``__dict__``,
+        which a frozen dataclass's eq/hash ignore) — a heavy-churn trace
+        at P=100k holds tens of thousands of events, and the seed's
+        linear scan per step made trace application quadratic."""
+        idx = self.__dict__.get("_by_step")
+        if idx is None:
+            idx = {}
+            for e in self.events:
+                idx.setdefault(e.step, []).append(e)
+            self.__dict__["_by_step"] = idx
+        return list(idx.get(step, ()))
 
     def to_json(self) -> str:
         return json.dumps([dataclasses.asdict(e) for e in self.events],

@@ -95,6 +95,7 @@ class CostModel:
             cand.method, self.env.d, self.env.p, bwd_chunks=cand.bwd_chunks,
             group_size=self.env.group_size, t_compute=self.env.t_compute,
             bwd_frac=self.env.bwd_frac, fuse_encode=self.env.fuse_encode,
+            participation=self.env.participation,
             net=self.net, replay=rep)
         err = self.error_proxy(cand, rep) if self.error_probe else 0.0
         bc = pred["bytes_critical"]

@@ -57,6 +57,7 @@ class Env:
     fuse_encode: bool = False         # price the fused-encode interleave
     link_alpha: float | None = None   # calibrated Eq. 1 startup (s)
     link_beta: float | None = None    # calibrated Eq. 1 inverse bw (s/B)
+    participation: float | None = None  # per-step cohort fraction (None=all)
 
     def link_spec(self) -> LinkSpec:
         # single source: the spec layer's calibrated-override-over-preset

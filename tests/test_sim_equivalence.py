@@ -1,0 +1,337 @@
+"""Pins the vectorized sim engine byte-identical to the loop engine.
+
+The batched engine (``sim/cluster._simulate_batched`` + array collective
+pricing + ``HeartbeatMonitor.beat_many``) must replay the EXACT timeline
+of the per-worker loop engine — same ``StepRecord``s, same replans, same
+makespan — across the existing test matrix (P x topology x fault traces x
+straggler drops). Also pins the array-form ``reduce_schedule`` against the
+pair-list form, the vectorized collective costs against scalar-``link()``
+references, the batched compute sampler's counter-based contract, the
+heartbeat vector API against the scalar one, and ``participation``
+sampling determinism.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import allreduce as ar
+from repro.runtime.heartbeat import HeartbeatMonitor
+from repro.sim import network as netm
+from repro.sim.cluster import SimConfig, sample_cohort, simulate
+from repro.sim.engine import BatchedEventLoop
+from repro.sim.traces import FaultTrace, TraceEvent, synthetic
+from repro.sim.workers import ComputeModel
+
+
+def _records(res):
+    return [dataclasses.asdict(r) for r in res.records]
+
+
+def _assert_identical(cfg, trace):
+    a = simulate(cfg, trace, engine="loop")
+    b = simulate(cfg, trace, engine="batched")
+    assert _records(a) == _records(b)
+    assert a.replans == b.replans
+    assert a.makespan == b.makespan
+
+
+def _trace(kind: str, p: int) -> FaultTrace:
+    if kind == "none":
+        return FaultTrace()
+    if kind == "fail_rejoin":
+        return synthetic(p, 12, fail_rate=0.4, rejoin_after=3, seed=p)
+    return synthetic(p, 12, fail_rate=0.25, straggle_rate=0.5,
+                     straggle_factor=8, rejoin_after=4, seed=p + 1)
+
+
+@pytest.mark.parametrize("p", [2, 5, 8, 16, 32, 64])
+@pytest.mark.parametrize("topology", ["flat", "hier"])
+@pytest.mark.parametrize("kind", ["none", "fail_rejoin", "churn"])
+def test_engines_identical(p, topology, kind):
+    cfg = SimConfig(p=p, d=50_000, steps=12, buckets=2, k=256, rows=3,
+                    width=1024, topology=topology, group_size=4,
+                    compute=ComputeModel(mean=0.05, jitter=0.05),
+                    heartbeat_timeout=0.4)
+    _assert_identical(cfg, _trace(kind, p))
+
+
+def test_engines_identical_no_drop_and_slow_workers():
+    cfg = SimConfig(p=16, d=50_000, steps=10, k=256, rows=3, width=1024,
+                    drop_stragglers=False, slow_workers={3: 10.0, 7: 2.5},
+                    compute=ComputeModel(mean=0.05, jitter=0.08),
+                    heartbeat_timeout=0.4)
+    _assert_identical(cfg, _trace("churn", 16))
+
+
+def test_engines_identical_interleaved_pipeline():
+    cfg = SimConfig(p=8, d=50_000, steps=8, buckets=4, bwd_chunks=4,
+                    fuse_encode=True, k=256, rows=3, width=1024,
+                    compute=ComputeModel(mean=0.05, jitter=0.05),
+                    heartbeat_timeout=0.4)
+    _assert_identical(cfg, _trace("fail_rejoin", 8))
+
+
+def test_engines_identical_with_participation():
+    cfg = SimConfig(p=32, d=50_000, steps=12, k=256, rows=3, width=1024,
+                    participation=0.25,
+                    compute=ComputeModel(mean=0.05, jitter=0.05),
+                    heartbeat_timeout=0.4)
+    _assert_identical(cfg, _trace("churn", 32))
+
+
+def test_straggle_factor_expires():
+    # a transient straggle stretches compute only while it lasts, and the
+    # state table is pruned once it expires (the two engines agree either
+    # way — this pins the SEMANTICS of duration)
+    tr = FaultTrace((TraceEvent(1, "straggle", 0, factor=10.0, duration=2),))
+    cfg = SimConfig(p=2, d=50_000, steps=5, k=256, rows=3, width=1024,
+                    drop_stragglers=False,
+                    compute=ComputeModel(mean=0.05, jitter=0.0))
+    res = simulate(cfg, tr)
+    barriers = [r.compute + r.stall for r in res.records]
+    assert barriers[0] == pytest.approx(0.05)
+    assert barriers[1] == pytest.approx(0.5)    # steps 1-2: factor 10
+    assert barriers[2] == pytest.approx(0.5)
+    assert barriers[3] == pytest.approx(0.05)   # expired at step 3
+    assert barriers[4] == pytest.approx(0.05)
+
+
+# -- participation sampling -------------------------------------------------
+
+
+def test_sample_cohort_contract():
+    members = np.array([7, 3, 11, 0, 42, 5], dtype=np.int64)
+    c = sample_cohort(0, 4, members, 0.5)
+    assert c.size == 3
+    # subset, in SURVIVOR order (rank order is the collective's rank->id map)
+    pos = [list(members).index(w) for w in c]
+    assert pos == sorted(pos)
+    # deterministic per (seed, step); different steps resample
+    assert np.array_equal(c, sample_cohort(0, 4, members, 0.5))
+    diff = [s for s in range(10)
+            if not np.array_equal(sample_cohort(0, s, members, 0.5), c)]
+    assert diff
+    # floor of one participant; full fraction short-circuits
+    assert sample_cohort(0, 0, members, 1e-9).size == 1
+    assert np.array_equal(sample_cohort(0, 0, members, 1.0), members)
+
+
+def test_participation_runs_deterministic_and_sized():
+    cfg = SimConfig(p=24, d=50_000, steps=10, k=256, rows=3, width=1024,
+                    participation=0.5,
+                    compute=ComputeModel(mean=0.05, jitter=0.05),
+                    heartbeat_timeout=0.4)
+    tr = synthetic(24, 10, fail_rate=0.3, rejoin_after=3, seed=9)
+    x, y = simulate(cfg, tr), simulate(cfg, tr)
+    assert x.to_json() == y.to_json()
+    for r in x.records:
+        assert r.sampled == max(1, round(0.5 * r.p))
+        assert r.sampled <= r.p
+
+
+# -- schedule arrays / collective pricing ----------------------------------
+
+
+@pytest.mark.parametrize("p", [2, 3, 4, 5, 7, 8, 13, 16, 100])
+def test_reduce_schedule_arrays_match_pair_lists(p):
+    pairs = ar.reduce_schedule(p)
+    arrays = ar.reduce_schedule_arrays(p)
+    assert len(pairs) == len(arrays)
+    for plist, (src, dst) in zip(pairs, arrays):
+        assert list(zip(src.tolist(), dst.tolist())) == list(plist)
+        assert not src.flags.writeable and not dst.flags.writeable
+
+
+def _ref_tree(net, ids, nbytes):
+    p = len(ids)
+    if p <= 1:
+        return []
+    sched = ar.reduce_schedule(p)
+    out = []
+    for pairs in sched:
+        dur = max(net.transfer(ids[s], ids[d], nbytes) for s, d in pairs)
+        out.append(netm.RoundCost(dur, nbytes * len(pairs), nbytes))
+    for pairs in reversed(sched):
+        dur = max(net.transfer(ids[d], ids[s], nbytes) for s, d in pairs)
+        out.append(netm.RoundCost(dur, nbytes * len(pairs), nbytes))
+    return out
+
+
+def _ref_ring(net, ids, nbytes):
+    p = len(ids)
+    if p <= 1:
+        return []
+    chunk = nbytes / p
+    dur = max(net.transfer(ids[i], ids[(i + 1) % p], chunk)
+              for i in range(p))
+    return [netm.RoundCost(dur, chunk * p, chunk)] * (2 * (p - 1))
+
+
+def _ref_ps(net, ids, nbytes):
+    srv = ids[0]
+    return [netm.RoundCost(net.transfer(w, srv, nbytes), nbytes, nbytes)
+            for w in ids if w != srv]
+
+
+def _ref_hier(net, ids, nbytes, gs):
+    p = len(ids)
+    if p <= 1:
+        return []
+    groups = [list(ids[i:i + gs]) for i in range(0, p, gs)]
+    leaders = [g[0] for g in groups]
+
+    def group_rounds(g, forward):
+        sched = ar.reduce_schedule(len(g))
+        seq = (list(sched) if forward
+               else [[(d, s) for s, d in pairs] for pairs in reversed(sched)])
+        out = []
+        for pairs in seq:
+            dur = max(net.transfer(g[s], g[d], nbytes) for s, d in pairs)
+            out.append((dur, nbytes * len(pairs)))
+        return out
+
+    def wave(forward):
+        per = [group_rounds(g, forward) for g in groups if len(g) > 1]
+        depth = max((len(r) for r in per), default=0)
+        return [netm.RoundCost(
+            max(r[i][0] for r in per if i < len(r)),
+            sum(r[i][1] for r in per if i < len(r)), nbytes)
+            for i in range(depth)]
+
+    return wave(True) + _ref_tree(net, leaders, nbytes) + wave(False)
+
+
+_NETS = [
+    netm.Homogeneous(),
+    netm.Hierarchical(group_size=4),
+    netm.Heterogeneous(netm.Hierarchical(group_size=4),
+                       {3: 7.5, 10: 2.0}),
+]
+
+
+@pytest.mark.parametrize("net", _NETS, ids=["homog", "hier", "hetero"])
+@pytest.mark.parametrize("n", [2, 3, 8, 13, 16])
+def test_vectorized_collectives_match_scalar_reference(net, n):
+    rng = np.random.default_rng(n)
+    ids = [int(w) for w in rng.permutation(n * 2)[:n]]
+    nbytes = 12_345.0
+    assert netm.tree_allreduce_cost(net, ids, nbytes) == \
+        _ref_tree(net, ids, nbytes)
+    assert netm.ring_allreduce_cost(net, ids, nbytes) == \
+        _ref_ring(net, ids, nbytes)
+    assert netm.ps_gather_cost(net, ids, nbytes) == _ref_ps(net, ids, nbytes)
+    assert netm.hierarchical_allreduce_cost(net, ids, nbytes, 4) == \
+        _ref_hier(net, ids, nbytes, 4)
+
+
+def test_pair_times_match_scalar_link():
+    for net in _NETS:
+        src = np.array([0, 3, 10, 5, 7], dtype=np.int64)
+        dst = np.array([4, 10, 3, 6, 2], dtype=np.int64)
+        want = [net.link(int(s), int(d)).time(999.0)
+                for s, d in zip(src, dst)]
+        got = net.pair_times(src, dst, 999.0)
+        assert got.tolist() == want
+        assert net.pair_times_max(src, dst, 999.0) == max(want)
+        assert net.pair_times_max(src[:0], dst[:0], 999.0) == 0.0
+
+
+# -- compute samplers -------------------------------------------------------
+
+
+def test_perworker_sampler_pins_seed_scheme():
+    cm = ComputeModel(mean=0.05, jitter=0.1, seed=3, sampler="perworker")
+    ids = (4, 0, 9)
+    durs = cm.durations(7, ids)
+    sigma2 = np.log1p(0.1 ** 2)
+    mu, sigma = np.log(0.05) - sigma2 / 2, np.sqrt(sigma2)
+    for w, got in zip(ids, durs):
+        rng = np.random.default_rng(np.random.SeedSequence([3, 7, w]))
+        assert got == rng.lognormal(mu, sigma)
+
+
+def test_batched_sampler_is_counter_based_per_id():
+    # a worker's draw must not depend on who else is in the membership
+    cm = ComputeModel(mean=0.05, jitter=0.1, seed=3)
+    full = cm.durations(2, np.arange(64))
+    sub = cm.durations(2, np.array([5, 63, 17]))
+    assert sub.tolist() == [full[5], full[63], full[17]]
+    # and straggle factors apply per-id whether sparse or dense
+    d_dict = cm.durations(2, np.array([5, 17]), {17: 4.0})
+    d_arr = cm.durations(2, np.array([5, 17]), np.array([1.0, 4.0]))
+    assert d_dict.tolist() == d_arr.tolist() == [full[5], full[17] * 4.0]
+
+
+# -- heartbeat vector API ---------------------------------------------------
+
+
+def test_beat_many_matches_scalar_beats():
+    t = [0.0]
+    a = HeartbeatMonitor(range(10), clock=lambda: t[0])
+    b = HeartbeatMonitor(range(10), clock=lambda: t[0])
+    t[0] = 1.0
+    for w in (1, 4, 7):
+        a.beat(w)
+    b.beat_many(np.array([1, 4, 7]))
+    t[0] = 1.8
+    assert a.dead(1.0) == b.dead(1.0) == set(range(10)) - {1, 4, 7}
+    assert b.last_of(np.array([1, 4, 7])).tolist() == [1.0] * 3
+    assert b.last_of(np.array([0, 9])).tolist() == [0.0] * 2
+
+
+def test_beat_many_requires_monitored_ids_and_survives_churn():
+    t = [0.0]
+    hb = HeartbeatMonitor(range(6), clock=lambda: t[0])
+    hb.remove(2)                      # swap-with-last compaction
+    with pytest.raises(KeyError):
+        hb.beat_many(np.array([1, 2]))
+    hb.add(2)
+    t[0] = 3.0
+    hb.beat_many(np.arange(6))
+    assert hb.dead(1.0) == set()
+    assert hb.last_of(np.arange(6)).tolist() == [3.0] * 6
+
+
+# -- batched event queue ----------------------------------------------------
+
+
+def test_at_array_coalesces_equal_timestamps():
+    loop = BatchedEventLoop()
+    fired = []
+    loop.at_array(np.array([1.0, 2.0, 1.0, 3.0, 2.0]),
+                  lambda lp, idx: fired.append((lp.now, sorted(idx.tolist()))))
+    loop.run()
+    assert fired == [(1.0, [0, 2]), (2.0, [1, 4]), (3.0, [3])]
+    loop2 = BatchedEventLoop()
+    loop2.at_array(np.empty(0), lambda lp, idx: fired.append("no"))
+    assert loop2.run() == 0.0 and len(fired) == 3
+
+
+# -- spec threading ---------------------------------------------------------
+
+
+def test_participation_threads_through_spec_env_and_predict():
+    from repro.api import RunSpec
+    from repro.api.spec import ClusterSpec, parse_opt_float
+    from repro.sim.replay import predict_step
+
+    spec = RunSpec(d=100_000,
+                   cluster=ClusterSpec(p=100, participation=0.1))
+    spec = dataclasses.replace(spec, steps=3)
+    assert spec.sim_config().participation == 0.1
+    env = spec.env()
+    assert env.participation == 0.1
+    assert RunSpec.from_env(env).cluster.participation == 0.1
+    pred = predict_step("gs-sgd", 100_000, 100, participation=0.1,
+                        rows=3, width=1024, k=256)
+    assert pred["p_eff"] == 10
+    full = predict_step("gs-sgd", 100_000, 100, rows=3, width=1024, k=256)
+    assert full["p_eff"] == 100
+    assert pred["rounds"] < full["rounds"]
+    assert parse_opt_float("0.25") == 0.25
+    with pytest.raises(ValueError):
+        ClusterSpec(p=4, participation=1.5).validate()
+    with pytest.raises(ValueError):
+        ClusterSpec(p=4, participation=0.0).validate()
