@@ -15,6 +15,12 @@ import time
 import traceback
 
 
+def _check(rc):
+    """Surface status-code benches (exit-1 style) as failures."""
+    if rc:
+        raise RuntimeError(f"bench exited with status {rc}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -22,13 +28,17 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     steps = 15 if args.fast else 60
 
-    from benchmarks import (comm_complexity, convergence, k_sensitivity,
-                            roofline, throughput, time_breakdown)
+    from benchmarks import (comm_complexity, convergence, drift_audit,
+                            k_sensitivity, roofline, throughput,
+                            time_breakdown)
 
     benches = [
         ("comm_complexity (Eq. 1)", lambda: comm_complexity.main()),
         ("roofline single-pod", lambda: roofline.main(["--mesh", "single"])),
         ("roofline multi-pod", lambda: roofline.main(["--mesh", "multi"])),
+        ("drift_audit (watchdog detect/re-plan)",
+         lambda: _check(drift_audit.main(
+             ["--fast"] if args.fast else []))),
         ("time_breakdown (Figs. 4-5)", lambda: time_breakdown.main()),
         ("throughput (Table II)", lambda: throughput.main()),
         ("convergence (Figs. 2-3)",

@@ -472,6 +472,71 @@ class ClusterSpec:
 
 
 # ---------------------------------------------------------------------------
+# WatchSpec — the streaming drift watchdog (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchSpec:
+    """The online truth loop: a streaming ``obs.drift.DriftDetector`` over
+    per-step records, calibration refit on a trailing window, and a
+    budgeted tuner re-plan applied at the next step boundary.
+
+    One declaration for train AND sim (``--watch`` on both surfaces), so
+    the testable sim leg and the live training leg share every threshold.
+    ``delta``/``threshold`` are the Page-Hinkley slack and alarm level on
+    *relative* per-phase residuals: a sustained relative shift ``rho``
+    alarms within ``ceil(threshold / (min(rho, 1) - delta))`` drifted
+    steps (the documented detection bound; ``benchmarks/drift_audit.py``
+    asserts it).
+    """
+
+    enabled: bool = _field(
+        False, "--watch", const=True, surfaces=("train", "sim"),
+        dest="watch",
+        help="stream per-step records through the drift watchdog: detect "
+             "sustained per-phase drift, refit calibration on a trailing "
+             "window, re-plan with the tuner, apply at the next step "
+             "boundary")
+    warmup: int = _field(
+        5, "--drift-warmup", parse=int, surfaces=("train", "sim"),
+        help="steps averaged into the frozen per-phase baseline before "
+             "the change test arms (re-arms after every re-plan)")
+    delta: float = _field(
+        0.1, "--drift-delta", parse=float, surfaces=("train", "sim"),
+        help="Page-Hinkley slack: relative per-step deviation ignored by "
+             "the drift test")
+    threshold: float = _field(
+        1.5, "--drift-threshold", parse=float, surfaces=("train", "sim"),
+        help="Page-Hinkley alarm threshold on accumulated relative excess")
+    window: int = _field(
+        8, "--drift-window", parse=int, surfaces=("train", "sim"),
+        help="trailing post-onset records the calibration refit uses")
+    replan_budget: int = _field(
+        16, "--replan-budget", parse=int, surfaces=("train", "sim"),
+        help="max tuner candidates evaluated per re-plan")
+
+    def validate(self) -> None:
+        if self.warmup < 1:
+            raise ValueError(f"drift warmup must be >= 1, got {self.warmup}")
+        if self.threshold < 0:
+            raise ValueError(
+                f"drift threshold must be >= 0, got {self.threshold}")
+        for f in ("window", "replan_budget"):
+            if getattr(self, f) < 1:
+                raise ValueError(
+                    f"watch {f} must be >= 1, got {getattr(self, f)}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "WatchSpec":
+        # pre-watchdog spec JSONs have no "watch" block: all defaults
+        return cls(**(d or {}))
+
+
+# ---------------------------------------------------------------------------
 # RunSpec — the whole run
 # ---------------------------------------------------------------------------
 
@@ -530,6 +595,7 @@ class RunSpec:
              "(repro.obs; 'none' = tracing off, zero overhead)")
     exchange: ExchangeSpec = _field(factory=ExchangeSpec)
     cluster: ClusterSpec = _field(factory=ClusterSpec)
+    watch: WatchSpec = _field(factory=WatchSpec)
 
     # -- validation ---------------------------------------------------------
 
@@ -543,6 +609,7 @@ class RunSpec:
             raise ValueError(f"d must be >= 1, got {self.d}")
         self.exchange.validate()
         self.cluster.validate()
+        self.watch.validate()
 
     # -- serialization ------------------------------------------------------
 
@@ -558,6 +625,7 @@ class RunSpec:
             raise ValueError(f"not a {SCHEMA} document: schema={schema!r}")
         d["exchange"] = ExchangeSpec.from_json(d.get("exchange") or {})
         d["cluster"] = ClusterSpec.from_json(d.get("cluster") or {})
+        d["watch"] = WatchSpec.from_json(d.get("watch") or {})
         return cls(**d)
 
     def save(self, path: str) -> None:

@@ -35,7 +35,7 @@ import time
 
 from repro import api
 from repro.api import RunSpec
-from repro.sim import FaultTrace, simulate, synthetic
+from repro.sim import FaultTrace, TraceEvent, simulate, synthetic
 
 
 def _parse_kv(spec: str) -> dict:
@@ -105,7 +105,8 @@ def curves_json(res) -> dict:
                "sampled": r.sampled,
                "dropped": list(r.dropped)} for r in res.records]
     return {"model": model, "methods": [cfg.method], "curves": curves,
-            "totals": res.totals(), "replans": res.replans, "checks": {}}
+            "totals": res.totals(), "replans": res.replans,
+            "watch": list(res.watch), "checks": {}}
 
 
 def main(argv=None) -> dict:
@@ -129,6 +130,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--synthetic-faults", default=None, metavar="KV",
                     help="generate a seeded trace, e.g. "
                          "'fail_rate=0.05,straggle_rate=0.1,rejoin_after=20'")
+    ap.add_argument("--congest", default=None, metavar="STEP:FACTOR[:DUR]",
+                    help="inject cluster-wide link congestion: comm times "
+                         "x FACTOR from STEP for DUR steps (default: the "
+                         "rest of the run) — the drift-watchdog scenario")
     ap.add_argument("--engine", default="batched",
                     choices=("batched", "loop"),
                     help="sim engine: 'batched' (vectorized, the P=100k "
@@ -186,13 +191,32 @@ def main(argv=None) -> dict:
         trace = synthetic(p, spec.steps, seed=spec.seed,
                           rejoin_after=int(rejoin) if rejoin else None,
                           **{k: float(v) for k, v in kv.items()})
+    if args.congest:
+        parts = args.congest.split(":")
+        if len(parts) not in (2, 3):
+            ap.error(f"--congest wants STEP:FACTOR[:DUR], got {args.congest!r}")
+        c_step, c_factor = int(parts[0]), float(parts[1])
+        c_dur = int(parts[2]) if len(parts) == 3 \
+            else max(1, spec.steps - c_step)
+        ev = TraceEvent(c_step, "congest", factor=c_factor, duration=c_dur)
+        trace = FaultTrace(tuple(sorted(trace.events + (ev,),
+                                        key=lambda e: e.step)))
+
+    watcher = None
+    if spec.watch.enabled:
+        from repro.tune.watch import SimWatcher
+        watcher = SimWatcher(spec)
+        w = spec.watch
+        print(f"watchdog armed: warmup={w.warmup} delta={w.delta} "
+              f"threshold={w.threshold} window={w.window} "
+              f"budget={w.replan_budget}")
 
     # the spec's network carries calibrated alpha/beta AND slow workers —
     # SimConfig's preset name alone would silently lose the calibration
     net = spec.cluster.network()
 
     t0 = time.time()
-    res = simulate(cfg, trace, net=net, engine=args.engine)
+    res = simulate(cfg, trace, net=net, engine=args.engine, watcher=watcher)
     wall = time.time() - t0
     tot = res.totals()
     print(f"simulated P={p} d={cfg.d:.2e} {cfg.method} "
@@ -207,6 +231,19 @@ def main(argv=None) -> dict:
           f"fabric bytes: {tot['bytes_wire']:.3e}  rounds: {tot['rounds']}")
     print(f"throughput: {tot['steps_per_s']:.2f} steps/s simulated; "
           f"{len(res.replans)} elastic replan(s)")
+    for w in res.watch:
+        if w["kind"] == "drift.detected":
+            print(f"watchdog: drift detected at step {w['step']} "
+                  f"({w['phase']} {w['direction']}, rel {w['rel']:+.2f}, "
+                  f"onset step {w['onset']})")
+        elif w["kind"] == "watch.replan":
+            print(f"watchdog: re-planned at step {w['step']} -> "
+                  f"{w['choice']} (predicted step "
+                  f"{w['predicted'] * 1e3:.2f}ms vs current "
+                  f"{w['current'] * 1e3:.2f}ms, gain {w['gain']:.1%})")
+        elif w["kind"] == "watch.keep":
+            print(f"watchdog: kept the current plan at step {w['step']} "
+                  f"(best candidate gain {w['gain']:.1%} < 1%)")
     if args.out:
         res.dump(args.out)
         print(f"wrote {args.out}")

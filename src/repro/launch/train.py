@@ -198,6 +198,14 @@ def main(argv=None) -> dict:
 
     cfg, opt, ma, ts = build(spec)
     P = spec.cluster.p
+    watchdog = None
+    if spec.watch.enabled:
+        from repro.tune.watch import Watchdog
+        watchdog = Watchdog(spec)   # raises now if the compressor can't be
+        w = spec.watch              # re-planned (sim-replayable methods only)
+        print(f"watchdog armed: warmup={w.warmup} delta={w.delta} "
+              f"threshold={w.threshold} window={w.window} "
+              f"budget={w.replan_budget}")
     stream = LMStream(vocab_size=cfg.vocab_size, seq_len=spec.seq,
                       global_batch=spec.batch, seed=spec.seed)
 
@@ -285,6 +293,7 @@ def main(argv=None) -> dict:
         print(f"wrote {args.json} ({len(records)} records)")
 
     t0 = time.time()
+    replanned_at = None   # next step recompiles -> tag it warmup
     for step in range(start, spec.steps):
         gb = stream.global_batch_at(step)
         if P > 1:
@@ -302,7 +311,7 @@ def main(argv=None) -> dict:
                 with tracer.span("probe", cat="probe",
                                  args={"step": step}) as sp:
                     sp.sync(probe_fn(state, batch))
-        warm = step == start
+        warm = step == start or replanned_at == step - 1
         t_step0 = time.time()
         with tnull.span(f"step{step}", cat="step",
                         args={"step": step, "warmup": warm}):
@@ -326,6 +335,46 @@ def main(argv=None) -> dict:
             met.counter("rounds").inc(stats.rounds)
             if not warm:
                 met.histogram("t_step").observe(t_step)
+        if watchdog is not None:
+            new = watchdog.on_step(
+                {"step": step, "t_step": t_step, "warmup": warm, "p": P},
+                now=time.time() - t0)
+            if new is not None:
+                ev = watchdog.log[-1]
+                print(f"watchdog: re-planned at step {step} -> "
+                      f"{ev['choice']} (predicted step "
+                      f"{ev['predicted'] * 1e3:.2f}ms vs current "
+                      f"{ev['current'] * 1e3:.2f}ms, gain {ev['gain']:.1%})")
+                spec = new
+                cfg, opt, ma, ts = build(spec)
+                # error-feedback carries over only when the new exchange
+                # keeps its pytree shape; a geometry change (bucket count,
+                # sketch size) resets the accumulator
+                new_ef = (ts.compressor.init(ts.d_local)
+                          if ts.compressor is not None
+                          else jnp.zeros((0,), jnp.float32))
+                if P > 1:
+                    new_ef = jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(a, (P,) + a.shape),
+                        new_ef)
+                old_l = jax.tree_util.tree_leaves(state["ef"])
+                new_l = jax.tree_util.tree_leaves(new_ef)
+                keep = (jax.tree_util.tree_structure(state["ef"])
+                        == jax.tree_util.tree_structure(new_ef)
+                        and len(old_l) == len(new_l)
+                        and all(a.shape == b.shape and a.dtype == b.dtype
+                                for a, b in zip(old_l, new_l)))
+                if not keep:
+                    print("watchdog: error-feedback reset "
+                          "(exchange geometry changed)")
+                    state = {**state, "ef": new_ef}
+                step_fn = (jax.jit(jax.vmap(ts.fn, axis_name="data"))
+                           if P > 1 else jax.jit(ts.fn))
+                if args.json:
+                    from repro.core import compression as comp
+                    stats = comp.static_comm_stats(ts.compressor,
+                                                   ts.d_local, P)
+                replanned_at = step
         if step % args.log_every == 0 or step == spec.steps - 1:
             print(f"step {step:5d}  loss {loss:.4f}  "
                   f"({(time.time() - t0):.1f}s)")
@@ -344,6 +393,8 @@ def main(argv=None) -> dict:
     dump_trace()
     save_trace()
     out = {"history": history, "final_loss": history[-1]}
+    if watchdog is not None:
+        out["watch"] = list(watchdog.log)
     print(json.dumps({"final_loss": history[-1],
                       "steps": len(history)}))
     return out

@@ -1,6 +1,8 @@
 """repro.obs — span tracing + metrics + provenance (DESIGN.md §10)."""
 
 from repro.obs import trace
+from repro.obs.drift import (DEFAULT_PHASES, DriftDetector, DriftEvent,
+                             detection_bound)
 from repro.obs.metrics import (TRACE2_SCHEMA, Metrics, dump, load_jsonl,
                                trace2_doc)
 from repro.obs.provenance import provenance, runspec_hash
@@ -11,4 +13,5 @@ __all__ = [
     "trace", "Tracer", "current", "from_sim", "validate", "NULL",
     "PHASES", "TRACE_SCHEMA", "TRACE2_SCHEMA", "Metrics", "trace2_doc",
     "dump", "load_jsonl", "provenance", "runspec_hash",
+    "DEFAULT_PHASES", "DriftDetector", "DriftEvent", "detection_bound",
 ]

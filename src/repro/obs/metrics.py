@@ -63,7 +63,10 @@ class Histogram:
     def summary(self) -> dict:
         v = sorted(self.values)
         if not v:
-            return {"count": 0}
+            # full key set, all null: exported JSON stays schema-stable and
+            # NaN/ZeroDivision-free when an instrument never observed
+            return {"count": 0, "mean": None, "min": None, "max": None,
+                    "p50": None, "p90": None, "p99": None}
         q = lambda p: v[min(len(v) - 1, int(math.ceil(p * len(v))) - 1)]  # noqa: E731
         return {"count": len(v), "mean": sum(v) / len(v),
                 "min": v[0], "max": v[-1],

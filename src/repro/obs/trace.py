@@ -402,4 +402,9 @@ def from_sim(result) -> Tracer:
                    args={k: rp.get(k) for k in
                          ("step", "generation", "p", "failed", "joined",
                           "lr_scale")})
+    for w in getattr(result, "watch", None) or []:
+        tr.instant(w.get("kind", "watch"), cat="runtime", track=track,
+                   ts=w.get("time") or 0.0,
+                   args={k: v for k, v in w.items()
+                         if k not in ("kind", "time")})
     return tr

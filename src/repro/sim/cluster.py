@@ -127,6 +127,7 @@ class SimResult:
     replans: list[dict]
     makespan: float
     events_run: int
+    watch: list = dataclasses.field(default_factory=list)  # watchdog log
 
     def phase_totals(self) -> dict[str, float]:
         keys = ("compute", "stall", "encode", "comm", "recover")
@@ -153,6 +154,7 @@ class SimResult:
             "config": dataclasses.asdict(self.config),
             "totals": self.totals(),
             "replans": self.replans,
+            "watch": list(self.watch),
             "steps": [dataclasses.asdict(r) for r in self.records],
         }
 
@@ -206,7 +208,11 @@ def _aged_silenced(hb: HeartbeatMonitor, silenced: set, now: float,
 
 def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
              net: NetworkModel | None = None, *,
-             engine: str = "batched") -> SimResult:
+             engine: str = "batched", watcher=None) -> SimResult:
+    """``watcher``: a ``tune.watch.SimWatcher`` — fed every StepRecord at
+    its (simulated) completion time; when it returns a new ``SimConfig``
+    the exchange geometry/schedule is swapped at the next step boundary
+    (membership, compute model, and step budget stay the run's own)."""
     trace = trace or FaultTrace()
     net = net or make_network(cfg.topology, link=cfg.link,
                               group_size=cfg.group_size,
@@ -219,10 +225,49 @@ def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
     compute = (cfg.compute if cfg.compute.seed is not None
                else dataclasses.replace(cfg.compute, seed=cfg.seed))
     if engine == "batched":
-        return _simulate_batched(cfg, trace, net, rep, compute)
+        return _simulate_batched(cfg, trace, net, rep, compute, watcher)
     if engine == "loop":
-        return _simulate_loop(cfg, trace, net, rep, compute)
+        return _simulate_loop(cfg, trace, net, rep, compute, watcher)
     raise ValueError(f"unknown engine {engine!r}; choose 'batched' or 'loop'")
+
+
+# ---------------------------------------------------------------------------
+# exchange state shared by both engines: the live replay + schedule knobs
+# (swappable mid-run by the watchdog) and any active congestion stretch
+# ---------------------------------------------------------------------------
+
+
+def _exchange_state(cfg: SimConfig, rep: ExchangeReplay) -> dict:
+    return {"rep": rep, "overlap": cfg.overlap, "bwd_chunks": cfg.bwd_chunks,
+            "fuse": cfg.fuse_encode, "congest_f": 1.0, "congest_until": -1}
+
+
+def _congested(stages, s: int, ex: dict):
+    """Stretch the per-bucket comm times by any active congest event.
+
+    Applied AFTER cache retrieval: the generation-keyed stage cache holds
+    UNSCALED times (membership-pure), so cached entries stay valid across
+    the congestion window's edges."""
+    if ex["congest_f"] != 1.0 and s < ex["congest_until"]:
+        return dataclasses.replace(
+            stages,
+            t_comm=tuple(t * ex["congest_f"] for t in stages.t_comm))
+    return stages
+
+
+def _apply_watch(ex: dict, cost_cache: dict, newcfg: SimConfig) -> None:
+    """Swap in a re-planned exchange at a step boundary: new replay
+    geometry + schedule knobs; the stage cache is invalidated (generation
+    is unchanged but the geometry under it is not)."""
+    ex["rep"] = ExchangeReplay(
+        newcfg.method, newcfg.d, buckets=newcfg.buckets, k=newcfg.k,
+        rows=newcfg.rows, width=newcfg.width, shape=newcfg.shape,
+        group_size=newcfg.group_size,
+        wire_dtype_bytes=newcfg.wire_dtype_bytes)
+    ex["overlap"] = newcfg.overlap
+    ex["bwd_chunks"] = newcfg.bwd_chunks
+    ex["fuse"] = newcfg.fuse_encode
+    cost_cache.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -231,12 +276,14 @@ def simulate(cfg: SimConfig, trace: FaultTrace | None = None,
 
 
 def _simulate_loop(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
-                   rep: ExchangeReplay, compute: ComputeModel) -> SimResult:
+                   rep: ExchangeReplay, compute: ComputeModel,
+                   watcher=None) -> SimResult:
     loop = EventLoop()
     hb = HeartbeatMonitor(range(cfg.p), clock=lambda: loop.now)
     policy = DeadlinePolicy(factor=cfg.deadline_factor,
                             max_drop_frac=cfg.max_drop_frac)
 
+    ex = _exchange_state(cfg, rep)
     st: dict = {"plan": initial_plan(cfg.p), "step": 0, "silenced": set(),
                 "straggle": {}, "pending_stall": 0.0, "applied": -1}
     cost_cache: dict[int, object] = {}     # keyed by plan.generation
@@ -287,6 +334,9 @@ def _simulate_loop(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
                     st["silenced"].add(ev.worker)
                 elif ev.kind == "straggle":
                     st["straggle"][ev.worker] = (ev.factor, s + ev.duration)
+                elif ev.kind == "congest":
+                    ex["congest_f"] = ev.factor
+                    ex["congest_until"] = s + ev.duration
 
         members = plan.survivor_ids
         if cfg.participation is not None:
@@ -369,19 +419,20 @@ def _simulate_loop(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
         # Readiness is clocked off the BARRIER (slowest included worker):
         # a bucket's all-reduce completes no earlier than the last
         # worker's emission.
-        interleave = cfg.bwd_chunks > 1 and cfg.overlap
+        interleave = ex["bwd_chunks"] > 1 and ex["overlap"]
         t_bwd = barrier * cfg.bwd_frac if interleave else 0.0
         if cfg.participation is not None:
-            stages = rep.stage_times(net, cohort)   # cohort varies per step
+            stages = ex["rep"].stage_times(net, cohort)  # varies per step
         else:
             stages = cost_cache.get(plan.generation)
             if stages is None:
                 stages = cost_cache[plan.generation] = \
-                    rep.stage_times(net, members)
-        pc = rep.step_cost(net, cohort, overlap=cfg.overlap,
-                           t_backward=t_bwd, bwd_chunks=cfg.bwd_chunks,
-                           fuse_encode=cfg.fuse_encode,
-                           stages=stages)
+                    ex["rep"].stage_times(net, members)
+        pc = ex["rep"].step_cost(net, cohort, overlap=ex["overlap"],
+                                 t_backward=t_bwd,
+                                 bwd_chunks=ex["bwd_chunks"],
+                                 fuse_encode=ex["fuse"],
+                                 stages=_congested(stages, s, ex))
         records.append(StepRecord(
             step=s, t_start=loop.now, p=plan.n_workers,
             generation=plan.generation, compute=t_compute,
@@ -391,6 +442,11 @@ def _simulate_loop(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
             rounds=pc.rounds, dropped=dropped, sampled=len(cohort)))
         st["pending_stall"] = 0.0
         step_wall = barrier + pc.encode + pc.comm + pc.recover
+        if watcher is not None:
+            newcfg = watcher.on_record(records[-1],
+                                       now=loop.now + step_wall)
+            if newcfg is not None:
+                _apply_watch(ex, cost_cache, newcfg)
 
         def finish(loop: EventLoop) -> None:
             for w in st["plan"].survivor_ids:
@@ -404,7 +460,8 @@ def _simulate_loop(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
     loop.after(0.0, run_step)
     makespan = loop.run()
     return SimResult(config=cfg, records=records, replans=replans,
-                     makespan=makespan, events_run=loop.events_run)
+                     makespan=makespan, events_run=loop.events_run,
+                     watch=list(watcher.log) if watcher is not None else [])
 
 
 # ---------------------------------------------------------------------------
@@ -413,13 +470,14 @@ def _simulate_loop(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
 
 
 def _simulate_batched(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
-                      rep: ExchangeReplay, compute: ComputeModel
-                      ) -> SimResult:
+                      rep: ExchangeReplay, compute: ComputeModel,
+                      watcher=None) -> SimResult:
     loop = BatchedEventLoop()
     hb = HeartbeatMonitor(range(cfg.p), clock=lambda: loop.now)
     policy = DeadlinePolicy(factor=cfg.deadline_factor,
                             max_drop_frac=cfg.max_drop_frac)
 
+    ex = _exchange_state(cfg, rep)
     st: dict = {"plan": initial_plan(cfg.p), "step": 0, "silenced": set(),
                 "straggle": {}, "pending_stall": 0.0, "applied": -1,
                 # per-generation membership caches: survivor-ORDER array
@@ -487,6 +545,9 @@ def _simulate_batched(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
                     st["silenced"].add(ev.worker)
                 elif ev.kind == "straggle":
                     st["straggle"][ev.worker] = (ev.factor, s + ev.duration)
+                elif ev.kind == "congest":
+                    ex["congest_f"] = ev.factor
+                    ex["congest_until"] = s + ev.duration
 
         members = st["members"]
         if cfg.participation is not None:
@@ -560,19 +621,20 @@ def _simulate_batched(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
                    else tuple(int(w) for w in cohort[~include]))
         barrier = float(np.max(durs[include]))
         t_compute = float(np.mean(durs[include]))
-        interleave = cfg.bwd_chunks > 1 and cfg.overlap
+        interleave = ex["bwd_chunks"] > 1 and ex["overlap"]
         t_bwd = barrier * cfg.bwd_frac if interleave else 0.0
         if cfg.participation is not None:
-            stages = rep.stage_times(net, cohort)   # cohort varies per step
+            stages = ex["rep"].stage_times(net, cohort)  # varies per step
         else:
             stages = cost_cache.get(plan.generation)
             if stages is None:
                 stages = cost_cache[plan.generation] = \
-                    rep.stage_times(net, members)
-        pc = rep.step_cost(net, cohort, overlap=cfg.overlap,
-                           t_backward=t_bwd, bwd_chunks=cfg.bwd_chunks,
-                           fuse_encode=cfg.fuse_encode,
-                           stages=stages)
+                    ex["rep"].stage_times(net, members)
+        pc = ex["rep"].step_cost(net, cohort, overlap=ex["overlap"],
+                                 t_backward=t_bwd,
+                                 bwd_chunks=ex["bwd_chunks"],
+                                 fuse_encode=ex["fuse"],
+                                 stages=_congested(stages, s, ex))
         records.append(StepRecord(
             step=s, t_start=lp.now, p=plan.n_workers,
             generation=plan.generation, compute=t_compute,
@@ -582,6 +644,10 @@ def _simulate_batched(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
             rounds=pc.rounds, dropped=dropped, sampled=int(cohort.size)))
         st["pending_stall"] = 0.0
         step_wall = barrier + pc.encode + pc.comm + pc.recover
+        if watcher is not None:
+            newcfg = watcher.on_record(records[-1], now=lp.now + step_wall)
+            if newcfg is not None:
+                _apply_watch(ex, cost_cache, newcfg)
 
         def finish(lp: EventLoop) -> None:
             hb.beat_many(live_members())
@@ -593,4 +659,5 @@ def _simulate_batched(cfg: SimConfig, trace: FaultTrace, net: NetworkModel,
     loop.after(0.0, run_step)
     makespan = loop.run()
     return SimResult(config=cfg, records=records, replans=replans,
-                     makespan=makespan, events_run=loop.events_run)
+                     makespan=makespan, events_run=loop.events_run,
+                     watch=list(watcher.log) if watcher is not None else [])

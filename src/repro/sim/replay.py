@@ -361,7 +361,8 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
                  wire_dtype_bytes: int = 4,
                  participation: float | None = None,
                  net: netm.NetworkModel | None = None,
-                 replay: "ExchangeReplay | None" = None) -> dict:
+                 replay: "ExchangeReplay | None" = None,
+                 profile=None) -> dict:
     """One-call candidate pricing — the auto-tuner's replay entry point.
 
     Builds the real ``ExchangeReplay`` (real compressor geometry, real
@@ -382,6 +383,14 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
     the per-phase splits, byte/round totals, and the RESOLVED geometry
     (post ``default_geometry`` defaults and ``bucketize`` scaling) for
     plan provenance.
+
+    ``profile`` is a measured-reality correction (duck-typed
+    ``tune.cost.CalibrationProfile``: a ``compute`` factor plus
+    ``scale_stages(StageTimes)``): compute time and the per-bucket
+    encode/comm/recover stage times are multiplied BEFORE the
+    overlap/interleave recurrence, so a congested link stretches the
+    schedule the way the fabric would, not just the reported totals.
+    ``None`` (and the identity profile) leave the output bit-exact.
     """
     net = net or netm.make_network(topology, link=link,
                                    group_size=group_size, intra=intra_link)
@@ -391,12 +400,17 @@ def predict_step(method: str, d: int, p: int, *, buckets: int = 1,
         wire_dtype_bytes=wire_dtype_bytes)
     p_eff = p if participation is None else max(1, int(round(participation * p)))
     ids = list(range(p_eff))
+    t_comp = t_compute if profile is None else t_compute * profile.compute
     interleave = bwd_chunks > 1 and overlap
-    t_bwd = t_compute * bwd_frac if interleave else 0.0
+    t_bwd = t_comp * bwd_frac if interleave else 0.0
+    stages = None if profile is None \
+        else profile.scale_stages(rep.stage_times(net, ids))
     pc = rep.step_cost(net, ids, overlap=overlap, t_backward=t_bwd,
-                       bwd_chunks=bwd_chunks, fuse_encode=fuse_encode)
+                       bwd_chunks=bwd_chunks, fuse_encode=fuse_encode,
+                       stages=stages)
     return {
-        "step_time": t_compute + pc.total,
+        "step_time": t_comp + pc.total,
+        "compute": t_comp,
         "p_eff": p_eff,
         "exposed_comm": pc.encode + pc.comm,
         "encode": pc.encode, "comm": pc.comm, "recover": pc.recover,

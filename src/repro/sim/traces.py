@@ -1,4 +1,4 @@
-"""Fault traces: scripted failure / rejoin / straggle scenarios.
+"""Fault traces: scripted failure / rejoin / straggle / congest scenarios.
 
 A trace is an ordered list of step-indexed events the cluster sim injects:
 
@@ -6,6 +6,7 @@ A trace is an ordered list of step-indexed events the cluster sim injects:
     {"step": 90, "kind": "join",     "worker": 3}
     {"step": 20, "kind": "straggle", "worker": 7, "factor": 12.0,
      "duration": 5}
+    {"step": 10, "kind": "congest", "factor": 6.0, "duration": 20}
 
 ``fail`` silences the worker's heartbeat (detection happens through the
 simulated ``HeartbeatMonitor``, not by fiat — the sim only learns of the
@@ -13,7 +14,10 @@ death when the timeout expires, exactly like the runtime layer).
 ``join`` hands a new/returning worker to ``elastic.replan(joined=...)``.
 ``straggle`` multiplies the worker's compute time by ``factor`` for
 ``duration`` steps (1 = a single spike) — the input ``DeadlinePolicy``
-turns into drop masks.
+turns into drop masks. ``congest`` is cluster-wide (``worker`` is
+ignored; -1 by convention): every collective's comm time is multiplied
+by ``factor`` for ``duration`` steps — mid-run link congestion, the
+scenario the drift watchdog is bounded against.
 
 Traces are plain JSON so scenarios can be version-controlled and shared
 between the CLI, the sweep benchmark, and tests; ``synthetic`` generates
@@ -27,16 +31,16 @@ import json
 
 import numpy as np
 
-KINDS = ("fail", "join", "straggle")
+KINDS = ("fail", "join", "straggle", "congest")
 
 
 @dataclasses.dataclass(frozen=True)
 class TraceEvent:
     step: int
     kind: str
-    worker: int
-    factor: float = 1.0     # straggle slowdown
-    duration: int = 1       # straggle length in steps
+    worker: int = -1        # -1 = cluster-wide (congest)
+    factor: float = 1.0     # straggle/congest slowdown
+    duration: int = 1       # straggle/congest length in steps
 
     def __post_init__(self):
         if self.kind not in KINDS:

@@ -15,16 +15,20 @@ the cost model to hardware with trace calibration, and emit a serializable
 CLI: ``python -m repro.launch.tune`` (see DESIGN.md §8).
 """
 
-from repro.tune.calibrate import (TRACE_SCHEMA, Calibration, fit, load_trace,
-                                  synthetic_trace)
-from repro.tune.cost import CandidateCost, CostModel, probe_gradient
+from repro.tune.calibrate import (TRACE_SCHEMA, Calibration, fit,
+                                  fit_profile, load_trace, synthetic_trace)
+from repro.tune.cost import (CalibrationProfile, CandidateCost, CostModel,
+                             probe_gradient)
 from repro.tune.plan import TunePlan
 from repro.tune.search import search
 from repro.tune.space import (Candidate, Env, SearchSpace, enumerate_valid,
                               validate)
+from repro.tune.watch import SimWatcher, Watchdog, predict_phases
 
 __all__ = [
-    "Calibration", "Candidate", "CandidateCost", "CostModel", "Env",
-    "SearchSpace", "TRACE_SCHEMA", "TunePlan", "enumerate_valid", "fit",
-    "load_trace", "probe_gradient", "search", "synthetic_trace", "validate",
+    "Calibration", "CalibrationProfile", "Candidate", "CandidateCost",
+    "CostModel", "Env", "SearchSpace", "SimWatcher", "TRACE_SCHEMA",
+    "TunePlan", "Watchdog", "enumerate_valid", "fit", "fit_profile",
+    "load_trace", "predict_phases", "probe_gradient", "search",
+    "synthetic_trace", "validate",
 ]

@@ -97,7 +97,16 @@ def _drop_warmup(records: list[dict], drop_first: int) -> list[dict]:
     return list(records)[drop_first:]
 
 
-def fit(traces, *, drop_first: int = 1) -> Calibration:
+def _windowed(records: list[dict], window: int | None) -> list[dict]:
+    if window is None:
+        return records
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    return records[-window:]
+
+
+def fit(traces, *, drop_first: int = 1,
+        window: int | None = None) -> Calibration:
     """Least-squares Eq. 1 fit over one or more record lists.
 
     traces: a record list, or a list of record lists (merge runs captured
@@ -105,6 +114,10 @@ def fit(traces, *, drop_first: int = 1) -> Calibration:
     drop_first: records dropped from the head of EACH trace (jit warmup
     pollutes the first measured step of a real run); ignored for traces
     whose records carry explicit ``warmup`` tags (trace@2).
+    window: keep only the trailing ``window`` records of EACH trace
+    (after the warmup drop) — the online-refit path: when the fabric
+    drifts mid-run, a trailing window recovers the POST-drift parameters
+    instead of averaging both regimes.
     """
     if isinstance(traces, dict):       # a whole trace document
         traces = [_normalize(traces)]
@@ -113,7 +126,8 @@ def fit(traces, *, drop_first: int = 1) -> Calibration:
             traces = [_normalize(t) for t in traces]   # list of documents
         else:
             traces = [traces]                          # one record list
-    recs = [r for t in traces for r in _drop_warmup(list(t), drop_first)]
+    recs = [r for t in traces
+            for r in _windowed(_drop_warmup(list(t), drop_first), window)]
     if len(recs) < 3:
         raise ValueError(f"need >= 3 records after warmup drop, got "
                          f"{len(recs)}")
@@ -154,6 +168,46 @@ def fit(traces, *, drop_first: int = 1) -> Calibration:
     return Calibration(alpha=float(alpha), beta=float(beta),
                        t_compute=float(t_compute),
                        jitter=jit, residual=rms, n_records=len(recs))
+
+
+def fit_profile(records, predicted: dict, *, window: int | None = None,
+                clamp: tuple = (0.05, 100.0)):
+    """Fit a ``tune.cost.CalibrationProfile`` from measured step records
+    against a model prediction — the watchdog's refit step.
+
+    records: per-step dicts (trace@2 row shape); rows tagged ``warmup``
+    are dropped, then only the trailing ``window`` rows are used (the
+    post-onset regime). predicted: a ``predict_step``-shaped dict for the
+    CURRENT spec (keys ``compute``/``encode``/``comm``/``recover``/
+    ``step_time``) priced with the identity profile.
+
+    Each phase factor is mean(measured phase)/predicted phase, clamped.
+    Records without per-phase splits (train measures only ``t_step``)
+    fall back to attributing the entire step-time shift to comm — the
+    dominant drift mode (congestion/stragglers) and the conservative
+    choice: it makes the tuner prefer comm-lean candidates.
+    """
+    from repro.tune.cost import CalibrationProfile
+    recs = _windowed(_drop_warmup(list(records), 0), window)
+    if not recs:
+        raise ValueError("no records to fit a profile from")
+    factors: dict[str, float] = {}
+    for phase in ("compute", "encode", "comm", "recover"):
+        pred = predicted.get(phase)
+        vals = [r[phase] for r in recs if r.get(phase) is not None]
+        if pred is not None and pred > 1e-12 and len(vals) == len(recs):
+            factors[phase] = _clamp(float(np.mean(vals)) / pred, clamp)
+    if not factors:
+        p_comm = predicted.get("comm") or 0.0
+        p_step = predicted.get("step_time") or 0.0
+        if p_comm > 1e-12:
+            shift = float(np.mean([r["t_step"] for r in recs])) - p_step
+            factors["comm"] = _clamp(1.0 + shift / p_comm, clamp)
+    return CalibrationProfile(**factors)
+
+
+def _clamp(v: float, clamp: tuple) -> float:
+    return min(clamp[1], max(clamp[0], v))
 
 
 def synthetic_trace(*, alpha: float, beta: float, t_compute: float,

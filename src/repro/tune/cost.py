@@ -38,6 +38,82 @@ from repro.tune.space import Candidate, Env, validate
 _ZIPF_EXP = 1.1  # heavy-tail exponent of the probe gradient (paper premise)
 
 
+def _clamped(v: float, clamp: tuple) -> float:
+    return min(clamp[1], max(clamp[0], v))
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationProfile:
+    """Per-phase multiplicative correction of the model's times to
+    measured reality — the feedback half of the truth loop.
+
+    ``predict_step(profile=...)`` multiplies compute by ``compute`` and
+    the per-bucket StageTimes by ``encode``/``comm``/``recover`` BEFORE
+    the overlap/interleave recurrence runs, so a congested link (comm
+    factor > 1) stretches the schedule the way the fabric would. The
+    identity profile is pinned bit-exact against the unprofiled output:
+    ``scale_stages`` returns the input object untouched when every stage
+    factor is 1.0 (and x * 1.0 is bit-exact for finite floats anyway).
+    """
+
+    compute: float = 1.0
+    encode: float = 1.0
+    comm: float = 1.0
+    recover: float = 1.0
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not (v > 0 and math.isfinite(v)):
+                raise ValueError(
+                    f"calibration factor {f.name} must be a positive "
+                    f"finite number, got {v}")
+
+    def is_identity(self) -> bool:
+        return (self.compute == self.encode == self.comm
+                == self.recover == 1.0)
+
+    def scale_stages(self, st):
+        """Scaled copy of a ``sim.replay.StageTimes`` (identity: the
+        same object, untouched)."""
+        if self.encode == self.comm == self.recover == 1.0:
+            return st
+        return dataclasses.replace(
+            st,
+            t_enc=tuple(t * self.encode for t in st.t_enc),
+            t_comm=tuple(t * self.comm for t in st.t_comm),
+            t_rec=tuple(t * self.recover for t in st.t_rec))
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CalibrationProfile":
+        return cls(**(d or {}))
+
+    @classmethod
+    def from_audit(cls, audit: dict,
+                   clamp: tuple = (0.05, 100.0)) -> "CalibrationProfile":
+        """Fit from a ``benchmarks/overlap_audit.py`` report: each phase
+        factor is measured/predicted from the audit's ``phase_deltas``
+        (compute from the forward+backward block), clamped to ``clamp``;
+        a phase the audit did not resolve (predicted ~0) stays 1.0."""
+        deltas = audit.get("phase_deltas") or {}
+        factors = {}
+        for phase in ("encode", "comm", "recover"):
+            row = deltas.get(phase) or {}
+            pred, meas = row.get("predicted"), row.get("measured")
+            if pred and meas is not None and pred > 1e-12:
+                factors[phase] = _clamped(meas / pred, clamp)
+        mp = (audit.get("measured") or {}).get("phases") or {}
+        pp = audit.get("predicted") or {}
+        m_comp = (mp.get("forward") or 0.0) + (mp.get("backward") or 0.0)
+        p_comp = (pp.get("forward") or 0.0) + (pp.get("backward") or 0.0)
+        if p_comp > 1e-12 and m_comp > 0:
+            factors["compute"] = _clamped(m_comp / p_comp, clamp)
+        return cls(**factors)
+
+
 @dataclasses.dataclass(frozen=True)
 class CandidateCost:
     """One candidate's predicted step economics (all seconds/bytes/step)."""
@@ -76,10 +152,12 @@ class CostModel:
     baseline bytes, and per-geometry error probes across evaluations."""
 
     def __init__(self, env: Env, *, error_probe: bool = True,
-                 probe_d: int = 1 << 14, probe_seed: int = 0):
+                 probe_d: int = 1 << 14, probe_seed: int = 0,
+                 profile: "CalibrationProfile | None" = None):
         self.env = env
         self.net = env.network()
         self.error_probe = error_probe
+        self.profile = profile
         self.probe_d = int(probe_d)
         self.probe_seed = int(probe_seed)
         self._probe_cache: dict[tuple, float] = {}
@@ -96,7 +174,7 @@ class CostModel:
             group_size=self.env.group_size, t_compute=self.env.t_compute,
             bwd_frac=self.env.bwd_frac, fuse_encode=self.env.fuse_encode,
             participation=self.env.participation,
-            net=self.net, replay=rep)
+            net=self.net, replay=rep, profile=self.profile)
         err = self.error_proxy(cand, rep) if self.error_probe else 0.0
         bc = pred["bytes_critical"]
         return CandidateCost(

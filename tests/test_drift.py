@@ -1,0 +1,455 @@
+"""Drift watchdog (DESIGN.md §12): detector, calibration feedback, re-plan.
+
+Pins the PR's acceptance criteria: zero false positives on jitter-free
+streams (and a clean ``--watch`` sim run bit-identical to no-watch), the
+analytic detection-latency bound, identity ``CalibrationProfile``
+bit-exactness through ``predict_step`` AND ``CostModel``, trailing-window
+calibration recovering planted post-drift parameters, and the end-to-end
+sim leg: injected mid-run congestion is detected within the bound,
+re-planned, and the re-planned makespan strictly beats riding it out —
+identically on both sim engines.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro import obs
+from repro.api import RunSpec, WatchSpec
+from repro.obs.drift import DEFAULT_PHASES, DriftDetector, detection_bound
+from repro.sim import FaultTrace, TraceEvent, replay, simulate
+from repro.tune import calibrate
+from repro.tune.cost import CalibrationProfile, CostModel
+from repro.tune.space import Candidate
+from repro.tune.watch import SimWatcher, Watchdog, predict_phases
+
+# ---------------------------------------------------------------------------
+# detector
+# ---------------------------------------------------------------------------
+
+BASE = {"compute": 0.10, "encode": 0.02, "comm": 0.05, "recover": 0.01}
+
+
+def _rec(step, *, comm=0.05, warmup=False, **kw):
+    r = {"step": step, "t_step": BASE["compute"] + BASE["encode"]
+         + comm + BASE["recover"], **BASE, "comm": comm}
+    if warmup:
+        r["warmup"] = True
+    r.update(kw)
+    return r
+
+
+def test_jitter_free_stream_never_alarms():
+    det = DriftDetector()
+    for s in range(200):
+        assert det.observe(_rec(s)) == []
+    assert det.events == []
+
+
+def test_detection_within_bound_and_onset():
+    det = DriftDetector(warmup=5, delta=0.1, threshold=1.5)
+    fired = []
+    drift_at = 20
+    for s in range(40):
+        comm = 0.05 * 6 if s >= drift_at else 0.05
+        fired += det.observe(_rec(s, comm=comm))
+        if fired:
+            break
+    assert fired, "sustained 6x comm drift never alarmed"
+    ev = fired[0]
+    assert ev.phase == "comm" and ev.direction == "up"
+    # rel = 5, winsorized at clip=1: bound = ceil(1.5 / (1 - 0.1)) = 2
+    bound = detection_bound(5.0, delta=0.1, threshold=1.5)
+    assert bound == 2
+    drifted_seen = ev.step - drift_at + 1
+    assert drifted_seen <= bound
+    # onset is the LAST CLEAN step: the refit window (step > onset)
+    # contains exactly the drifted records
+    assert ev.onset == drift_at - 1
+    assert ev.baseline == pytest.approx(0.05)
+    assert ev.rel == pytest.approx(5.0)
+
+
+def test_single_transient_spike_cannot_alarm():
+    # one spike contributes at most clip - delta = 0.9 < threshold 1.5,
+    # then clean samples decay the accumulator
+    det = DriftDetector(warmup=5, delta=0.1, threshold=1.5)
+    for s in range(60):
+        comm = 5.0 if s == 20 else 0.05
+        assert det.observe(_rec(s, comm=comm)) == []
+
+
+def test_downward_drift_detected():
+    det = DriftDetector(warmup=5)
+    fired = []
+    for s in range(30):
+        comm = 0.05 * 0.2 if s >= 10 else 0.05
+        fired += det.observe(_rec(s, comm=comm))
+        if fired:
+            break
+    assert fired and fired[0].direction == "down"
+    assert fired[0].phase == "comm"
+
+
+def test_warmup_tagged_records_never_enter_baseline():
+    det = DriftDetector(warmup=3)
+    # garbage while jit-compiling: tagged records are skipped entirely
+    for s in range(3):
+        assert det.observe(_rec(s, comm=9.9, warmup=True)) == []
+    for s in range(3, 20):
+        assert det.observe(_rec(s)) == []
+    assert det.baseline("comm") == pytest.approx(0.05)
+
+
+def test_detector_is_deterministic_and_resettable():
+    stream = [_rec(s, comm=(0.3 if s >= 12 else 0.05)) for s in range(25)]
+    runs = []
+    det = DriftDetector(warmup=5)
+    for _ in range(2):
+        det.reset()
+        det.events.clear()
+        for r in stream:
+            det.observe(r)
+        runs.append([dataclasses.asdict(e) for e in det.events])
+    assert runs[0] == runs[1] and runs[0]
+    # comm moved, so t_step moved with it — both streams alarm once;
+    # after an alarm each stream re-learns the new regime, so the SAME
+    # sustained level never re-alarms
+    assert sorted(e["phase"] for e in runs[0]) == ["comm", "t_step"]
+
+
+def test_detection_bound_inside_slack_is_infinite():
+    assert detection_bound(0.05, delta=0.1, threshold=1.5) >= 1 << 30
+    assert detection_bound(2.0, delta=0.1, threshold=1.5, clip=1.0) == 2
+    assert detection_bound(0.5, delta=0.1, threshold=1.2) == 3
+
+
+def test_alarm_emits_ambient_trace_instant():
+    class FakeClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    tr = obs.Tracer(clock=FakeClock(), epoch=0.0)
+    det = DriftDetector(warmup=2, delta=0.1, threshold=0.5)
+    with tr.activate():
+        for s in range(10):
+            det.observe(_rec(s, comm=(0.5 if s >= 4 else 0.05)), ts=1.5)
+            if det.events:
+                break
+    doc = tr.to_chrome()
+    inst = [e for e in doc["traceEvents"]
+            if e.get("name") == "drift.detected"]
+    assert inst and inst[0]["args"]["phase"] == "comm"
+    assert inst[0]["args"]["onset"] == det.events[0].onset
+
+
+def test_stall_is_not_a_watched_phase():
+    assert "stall" not in DEFAULT_PHASES
+    det = DriftDetector(warmup=2, threshold=0.5)
+    for s in range(20):  # huge stall swings: never an alarm source
+        assert det.observe(_rec(s, stall=float(s % 7))) == []
+
+
+# ---------------------------------------------------------------------------
+# calibration profile
+# ---------------------------------------------------------------------------
+
+_PRED_KW = dict(buckets=4, bwd_chunks=2, t_compute=0.1)
+
+
+def test_identity_profile_is_bit_exact_through_predict_step():
+    base = replay.predict_step("gs-sgd", 1 << 20, 8, **_PRED_KW)
+    ident = replay.predict_step("gs-sgd", 1 << 20, 8, **_PRED_KW,
+                                profile=CalibrationProfile())
+    for k in ("step_time", "compute", "encode", "comm", "recover",
+              "exposed_comm", "comm_serial"):
+        assert base[k] == ident[k], k  # bit-exact, not approx
+
+
+def test_identity_profile_is_bit_exact_through_cost_model():
+    env = RunSpec(d=1 << 20).env()
+    cand = Candidate(buckets=4, bwd_chunks=2)
+    a = CostModel(env, error_probe=False).evaluate(cand)
+    b = CostModel(env, error_probe=False,
+                  profile=CalibrationProfile()).evaluate(cand)
+    assert a == b
+
+
+def test_comm_factor_scales_serial_comm_exactly():
+    f = 6.0
+    base = replay.predict_step("gs-sgd", 1 << 20, 8, **_PRED_KW)
+    prof = replay.predict_step("gs-sgd", 1 << 20, 8, **_PRED_KW,
+                               profile=CalibrationProfile(comm=f))
+    assert prof["comm_serial"] == pytest.approx(base["comm_serial"] * f)
+    assert prof["step_time"] > base["step_time"]
+
+
+def test_profile_validation_and_round_trip():
+    p = CalibrationProfile(comm=6.0, compute=0.5)
+    assert CalibrationProfile.from_json(p.to_json()) == p
+    assert CalibrationProfile.from_json({}) == CalibrationProfile()
+    assert CalibrationProfile().is_identity()
+    assert not p.is_identity()
+    with pytest.raises(ValueError):
+        CalibrationProfile(comm=0.0)
+    with pytest.raises(ValueError):
+        CalibrationProfile(encode=float("nan"))
+
+
+def test_fit_profile_recovers_exact_phase_factors():
+    pred = {"compute": 0.1, "encode": 0.02, "comm": 0.05,
+            "recover": 0.01, "step_time": 0.18}
+    recs = [{"step": s, "compute": 0.1 * 1.2, "encode": 0.02 * 0.8,
+             "comm": 0.05 * 6.0, "recover": 0.01, "t_step": 0.0}
+            for s in range(6)]
+    prof = calibrate.fit_profile(recs, pred)
+    assert prof.compute == pytest.approx(1.2)
+    assert prof.encode == pytest.approx(0.8)
+    assert prof.comm == pytest.approx(6.0)
+    assert prof.recover == pytest.approx(1.0)
+
+
+def test_fit_profile_t_step_only_attributes_shift_to_comm():
+    pred = {"comm": 0.05, "step_time": 0.18}
+    recs = [{"step": s, "t_step": 0.18 + 0.05 * 5.0} for s in range(4)]
+    prof = calibrate.fit_profile(recs, pred)
+    assert prof.comm == pytest.approx(6.0)
+    assert prof.compute == 1.0 and prof.encode == 1.0
+
+
+def test_fit_profile_trailing_window_ignores_pre_drift_regime():
+    pred = {"comm": 0.05, "step_time": 0.18}
+    recs = ([{"step": s, "comm": 0.05, "compute": 0.1, "encode": 0.02,
+              "recover": 0.01, "t_step": 0.18} for s in range(10)]
+            + [{"step": s, "comm": 0.30, "compute": 0.1, "encode": 0.02,
+                "recover": 0.01, "t_step": 0.43} for s in range(10, 16)])
+    blended = calibrate.fit_profile(recs, pred)
+    windowed = calibrate.fit_profile(recs, pred, window=6)
+    assert windowed.comm == pytest.approx(6.0)
+    assert 1.0 < blended.comm < 6.0  # full fit averages both regimes
+
+
+# ---------------------------------------------------------------------------
+# fit(window=) + _drop_warmup (satellites)
+# ---------------------------------------------------------------------------
+
+def _eq1_rec(step, rounds, nbytes, alpha, beta, t_compute=0.1):
+    return {"step": step, "rounds": rounds, "bytes": nbytes,
+            "t_compute": t_compute,
+            "t_step": t_compute + rounds * alpha + nbytes * beta}
+
+
+def test_fit_trailing_window_recovers_post_drift_parameters():
+    a1, b1 = 1e-3, 2e-9
+    a2, b2 = 6e-3, 1.2e-8          # the congested regime
+    cells = [(2, 1e6), (8, 2.5e5), (4, 5e5), (16, 1.25e5)]
+    recs = ([_eq1_rec(s, *cells[s % 4], a1, b1) for s in range(12)]
+            + [_eq1_rec(12 + s, *cells[s % 4], a2, b2) for s in range(8)])
+    post = calibrate.fit(recs, window=8)
+    assert post.alpha == pytest.approx(a2, rel=1e-6)
+    assert post.beta == pytest.approx(b2, rel=1e-6)
+    blended = calibrate.fit(recs)
+    assert blended.alpha != pytest.approx(a2, rel=1e-3)
+    with pytest.raises(ValueError, match="window"):
+        calibrate.fit(recs, window=0)
+
+
+def test_drop_warmup_mixed_tagged_and_untagged_records():
+    # ANY record carrying a warmup key switches the whole trace to
+    # tag-filtering: untagged rows are KEPT (not positionally dropped),
+    # warmup=False rows are kept, warmup=True rows go
+    recs = [{"step": 0, "warmup": True}, {"step": 1},
+            {"step": 2, "warmup": False}, {"step": 3}]
+    kept = calibrate._drop_warmup(recs, drop_first=2)
+    assert [r["step"] for r in kept] == [1, 2, 3]
+    # fully untagged traces keep the positional heuristic
+    plain = [{"step": s} for s in range(4)]
+    assert [r["step"] for r in
+            calibrate._drop_warmup(plain, drop_first=2)] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_watch_spec_round_trip_and_legacy_json():
+    spec = dataclasses.replace(
+        RunSpec(), watch=WatchSpec(enabled=True, warmup=3, threshold=2.0))
+    back = RunSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back.watch == spec.watch
+    # pre-PR-9 spec JSONs have no "watch" key: defaults (disabled)
+    d = RunSpec().to_json()
+    d.pop("watch")
+    old = RunSpec.from_json(d)
+    assert old.watch == WatchSpec() and not old.watch.enabled
+    with pytest.raises(ValueError):
+        WatchSpec(warmup=0).validate()
+    with pytest.raises(ValueError):
+        WatchSpec(threshold=-1.0).validate()
+
+
+def test_watch_cli_flags_are_generated_from_the_spec():
+    import argparse
+
+    from repro import api
+    for surface in ("train", "sim"):
+        ap = argparse.ArgumentParser()
+        api.add_spec_args(ap, surface)
+        args = ap.parse_args(["--watch", "--drift-warmup", "2",
+                              "--drift-threshold", "0.5",
+                              "--replan-budget", "4"])
+        spec = api.apply_args(RunSpec(), args, surface)
+        w = spec.watch
+        assert w.enabled and w.warmup == 2
+        assert w.threshold == 0.5 and w.replan_budget == 4
+        # unset flags keep spec defaults
+        assert w.delta == WatchSpec().delta
+
+
+def test_watchdog_refuses_non_replayable_compressor():
+    spec = dataclasses.replace(RunSpec(), d=1 << 16)
+    spec = dataclasses.replace(
+        spec, exchange=dataclasses.replace(spec.exchange,
+                                           compressor="topk"),
+        watch=WatchSpec(enabled=True))
+    with pytest.raises(ValueError):
+        Watchdog(spec)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the sim leg
+# ---------------------------------------------------------------------------
+
+STEPS = 20
+CONGEST_AT = 8
+FACTOR = 6.0
+
+
+def _spec(p=8, d=1_000_000):
+    base = RunSpec()
+    return dataclasses.replace(
+        base, d=d, steps=STEPS,
+        cluster=dataclasses.replace(base.cluster, p=p, compute_jitter=0.0),
+        watch=dataclasses.replace(base.watch, enabled=True))
+
+
+def _congest_trace():
+    return FaultTrace((TraceEvent(CONGEST_AT, "congest", factor=FACTOR,
+                                  duration=STEPS - CONGEST_AT),))
+
+
+def _sim(spec, trace, *, watch, engine="batched"):
+    return simulate(spec.sim_config(), trace, net=spec.cluster.network(),
+                    engine=engine,
+                    watcher=SimWatcher(spec) if watch else None)
+
+
+def test_clean_watched_run_is_a_bit_exact_noop():
+    spec = _spec()
+    plain = _sim(spec, FaultTrace(), watch=False)
+    watched = _sim(spec, FaultTrace(), watch=True)
+    assert [e["kind"] for e in watched.watch] == []
+    assert ([dataclasses.asdict(r) for r in plain.records]
+            == [dataclasses.asdict(r) for r in watched.records])
+    assert plain.totals()["makespan"] == watched.totals()["makespan"]
+
+
+def test_congestion_detected_within_bound_and_replanned():
+    spec = _spec()
+    res = _sim(spec, _congest_trace(), watch=True)
+    dets = [e for e in res.watch if e["kind"] == "drift.detected"]
+    assert dets, "injected 6x congestion was never detected"
+    det = dets[0]
+    assert det["phase"] == "comm" and det["direction"] == "up"
+    bound = detection_bound(FACTOR - 1.0, delta=spec.watch.delta,
+                            threshold=spec.watch.threshold)
+    assert det["step"] - CONGEST_AT + 1 <= bound
+    assert det["onset"] == CONGEST_AT - 1
+    replans = [e for e in res.watch if e["kind"] == "watch.replan"]
+    assert replans and replans[0]["gain"] >= 0.01
+    # the refit profile attributed the drift to comm
+    assert replans[0]["profile"]["comm"] > 2.0
+
+
+def test_replanned_makespan_beats_riding_out_congestion():
+    spec = _spec()
+    rode = _sim(spec, _congest_trace(), watch=False)
+    fixed = _sim(spec, _congest_trace(), watch=True)
+    assert (fixed.totals()["makespan"]
+            < rode.totals()["makespan"]), "re-plan did not pay for itself"
+
+
+def test_watched_runs_identical_on_both_engines():
+    spec = _spec(p=6)
+    outs = []
+    for engine in ("loop", "batched"):
+        res = _sim(spec, _congest_trace(), watch=True, engine=engine)
+        outs.append(([dataclasses.asdict(r) for r in res.records],
+                     res.watch, res.totals()["makespan"]))
+    assert outs[0] == outs[1]
+
+
+def test_watchdog_converges_instead_of_churning_replans():
+    # detector forced hot (threshold 0, delta < 0) on a CLEAN run: every
+    # post-warmup step alarms. At most ONE re-plan may fire (the tuner
+    # genuinely improving on the un-tuned default geometry); once the
+    # spec is the profile-corrected optimum every later alarm must log
+    # watch.keep — a persistent signal never churns plan swaps.
+    spec = _spec()
+    spec = dataclasses.replace(
+        spec, watch=dataclasses.replace(spec.watch, warmup=1, delta=-1.0,
+                                        threshold=0.0))
+    res = _sim(spec, FaultTrace(), watch=True)
+    kinds = [e["kind"] for e in res.watch]
+    assert "drift.detected" in kinds
+    replans = [e for e in res.watch if e["kind"] == "watch.replan"]
+    assert len(replans) <= 1
+    assert all(e["gain"] >= 0.01 for e in replans)
+    assert any(e["kind"] == "watch.keep" for e in res.watch)
+
+
+def test_predict_phases_matches_raw_predict_step():
+    spec = _spec()
+    cfg = spec.sim_config()
+    via_watch = predict_phases(spec)
+    raw = replay.predict_step(
+        cfg.method, cfg.d, cfg.p, buckets=cfg.buckets,
+        bwd_chunks=cfg.bwd_chunks, k=cfg.k, rows=cfg.rows,
+        width=cfg.width, shape=cfg.shape, group_size=cfg.group_size,
+        overlap=cfg.overlap, fuse_encode=cfg.fuse_encode,
+        t_compute=cfg.compute.mean, bwd_frac=cfg.bwd_frac,
+        wire_dtype_bytes=cfg.wire_dtype_bytes,
+        participation=cfg.participation, net=spec.cluster.network())
+    assert via_watch == raw
+
+
+# ---------------------------------------------------------------------------
+# the train leg (forced detection — real congestion is not injectable
+# into a local smoke run, so the detector is armed hot instead)
+# ---------------------------------------------------------------------------
+
+def test_train_watch_detects_and_decides():
+    from repro.launch.train import main as train_main
+    out = train_main(["--smoke", "--workers", "2", "--steps", "4",
+                      "--batch", "4", "--seq", "16", "--log-every", "5",
+                      "--watch", "--drift-warmup", "1",
+                      "--drift-delta", "-1", "--drift-threshold", "0",
+                      "--replan-budget", "4"])
+    kinds = [e["kind"] for e in out["watch"]]
+    assert "drift.detected" in kinds
+    # every detection reached a decision (replan or keep), and any
+    # applied re-plan cleared the 1% gain bar
+    assert len(kinds) == 2 * kinds.count("drift.detected")
+    for e in out["watch"]:
+        if e["kind"] == "watch.replan":
+            assert e["gain"] >= 0.01
+
+
+def test_train_without_watch_has_no_watch_key():
+    from repro.launch.train import main as train_main
+    out = train_main(["--smoke", "--workers", "2", "--steps", "2",
+                      "--batch", "4", "--seq", "16", "--log-every", "5"])
+    assert "watch" not in out

@@ -149,7 +149,17 @@ def test_metrics_registry_and_histogram():
     h = snap["histograms"]["t"]
     assert h["count"] == 4 and h["min"] == 1.0 and h["max"] == 4.0
     assert h["p50"] == 2.0 and h["mean"] == pytest.approx(2.5)
-    assert obs.Metrics().histogram("e").summary() == {"count": 0}
+    # zero-observation instruments export the FULL key set (all null),
+    # so downstream JSON consumers stay schema-stable and never divide
+    # by a zero count
+    empty = obs.Metrics().histogram("e").summary()
+    assert empty == {"count": 0, "mean": None, "min": None, "max": None,
+                     "p50": None, "p90": None, "p99": None}
+    snap = obs.Metrics()
+    snap.histogram("never")            # instrument exists, no samples
+    s = snap.snapshot()
+    assert s["histograms"]["never"]["count"] == 0
+    assert json.dumps(s)               # NaN-free, serializable
 
 
 def test_trace2_jsonl_roundtrip(tmp_path):

@@ -360,8 +360,9 @@ def test_trace_json_roundtrip(tmp_path):
 def test_sim_result_json_schema():
     res = simulate(_small_cfg(steps=3))
     js = res.to_json()
-    assert set(js) == {"config", "totals", "replans", "steps"}
+    assert set(js) == {"config", "totals", "replans", "steps", "watch"}
     assert js["totals"]["steps"] == 3
+    assert js["watch"] == []       # no watcher armed
     assert js["steps"][0]["p"] == 8
     for key in ("compute", "stall", "encode", "comm", "recover"):
         assert js["totals"][key] >= 0.0
