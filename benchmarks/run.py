@@ -29,8 +29,8 @@ def main(argv=None) -> int:
     steps = 15 if args.fast else 60
 
     from benchmarks import (comm_complexity, convergence, drift_audit,
-                            k_sensitivity, roofline, throughput,
-                            time_breakdown)
+                            k_sensitivity, roofline, serve_load,
+                            throughput, time_breakdown)
 
     benches = [
         ("comm_complexity (Eq. 1)", lambda: comm_complexity.main()),
@@ -38,6 +38,9 @@ def main(argv=None) -> int:
         ("roofline multi-pod", lambda: roofline.main(["--mesh", "multi"])),
         ("drift_audit (watchdog detect/re-plan)",
          lambda: _check(drift_audit.main(
+             ["--fast"] if args.fast else []))),
+        ("serve_load (CB vs static on one trace)",
+         lambda: _check(serve_load.main(
              ["--fast"] if args.fast else []))),
         ("time_breakdown (Figs. 4-5)", lambda: time_breakdown.main()),
         ("throughput (Table II)", lambda: throughput.main()),

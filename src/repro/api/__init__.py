@@ -14,13 +14,15 @@ DESIGN.md §9.
 from repro.api.cli import (SPEC_TREE, SURFACES, add_spec_args, apply_args,
                            build_parser, iter_cli_fields)
 from repro.api.spec import (SCHEMA, SHAPES, WIRE_DTYPES, ClusterSpec,
-                            ExchangeSpec, RunSpec, SketchSpec, WatchSpec,
+                            ExchangeSpec, RunSpec, ServeSpec, SketchSpec,
+                            WatchSpec,
                             check_exchange_config, coerce_rows,
                             parse_slow_workers)
 
 __all__ = [
     "SCHEMA", "SHAPES", "SPEC_TREE", "SURFACES", "WIRE_DTYPES",
-    "ClusterSpec", "ExchangeSpec", "RunSpec", "SketchSpec", "WatchSpec",
+    "ClusterSpec", "ExchangeSpec", "RunSpec", "ServeSpec", "SketchSpec",
+    "WatchSpec",
     "add_spec_args", "apply_args", "build_parser", "check_exchange_config",
     "coerce_rows", "iter_cli_fields", "parse_slow_workers",
 ]

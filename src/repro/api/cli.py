@@ -27,6 +27,7 @@ SPEC_TREE = (
     (("exchange", "sketch"), S.SketchSpec),
     (("cluster",), S.ClusterSpec),
     (("watch",), S.WatchSpec),
+    (("serve",), S.ServeSpec),
 )
 
 SURFACES = ("train", "sim", "tune", "serve")

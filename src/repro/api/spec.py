@@ -401,6 +401,10 @@ class ClusterSpec:
         help="per-step client participation fraction in (0, 1]; each step "
              "samples a max(1, round(FRAC*P)) cohort counter-based per "
              "(seed, step) ('none' = full participation)")
+    mem_gb: float = _field(
+        16.0, "--mem-gb", parse=float, surfaces=("serve",),
+        help="per-device memory budget (GB) the paged KV-cache pool is "
+             "sized from (serve surface)")
     rescale_lr: bool = True
     compute_mean: float = _field(
         0.1, "--compute-mean", parse=float, surfaces=("sim", "tune"),
@@ -438,6 +442,9 @@ class ClusterSpec:
             if factor <= 0:
                 raise ValueError(f"slow-worker factor for worker {w} must "
                                  f"be > 0, got {factor}")
+        if not (self.mem_gb > 0 and math.isfinite(self.mem_gb)):
+            raise ValueError(f"mem_gb must be a positive finite number, "
+                             f"got {self.mem_gb}")
         if self.participation is not None and not (
                 0.0 < self.participation <= 1.0):
             raise ValueError(f"participation must be in (0, 1], got "
@@ -537,6 +544,128 @@ class WatchSpec:
 
 
 # ---------------------------------------------------------------------------
+# ServeSpec — the serving engine (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+SERVE_POLICIES = ("continuous", "static")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The ``repro.serve`` engine: continuous-batching slots, the paged KV
+    cache, streaming/stop conditions, replication, and the load-test
+    arrival process.
+
+    The serve CLI's old raw-argparse knobs (``--batch``/``--prompt-len``/
+    ``--gen``) live HERE now, so ``--spec``/``--dump-spec`` round-trips
+    carry them (the PR 5 single-source-of-truth invariant). ``batch`` is
+    the number of serving slots — NOT the training global batch, which is
+    ``RunSpec.batch`` on the train surface. Deadlines, rates, and the
+    load-test timeline are in *modeled* (virtual) seconds priced by
+    ``serve.scheduler.predict_admission`` from the ClusterSpec
+    link/compute parameters, so scheduling decisions are deterministic.
+    """
+
+    batch: int = _field(
+        4, "--batch", parse=int, surfaces=("serve",),
+        help="serving slots (continuous-batching concurrency; not the "
+             "training global batch)")
+    prompt_len: int = _field(
+        32, "--prompt-len", parse=int, surfaces=("serve",),
+        help="demo / load-test max prompt length (tokens)")
+    gen: int = _field(
+        16, "--gen", parse=int, surfaces=("serve",),
+        help="max new tokens generated per request")
+    block_size: int = _field(
+        8, "--block-size", parse=int, surfaces=("serve",),
+        help="paged KV cache block size (tokens per block)")
+    max_len: int | None = _field(
+        None, "--max-len", parse=parse_opt_int, surfaces=("serve",),
+        help="per-request sequence capacity ('none' = prompt_len + gen, "
+             "rounded up to whole blocks)")
+    paged: bool = _field(
+        True, "--no-paged", const=False, surfaces=("serve",), dest="paged",
+        help="use the contiguous per-slot KV cache instead of the paged "
+             "pool (the bit-exactness baseline)")
+    kv_frac: float = _field(
+        0.5, "--kv-frac", parse=float, surfaces=("serve",),
+        help="fraction of cluster.mem_gb the paged KV pool may use")
+    kv_blocks: int | None = _field(
+        None, "--kv-blocks", parse=parse_opt_int, surfaces=("serve",),
+        help="explicit paged-pool block count override ('none' = size "
+             "from cluster.mem_gb * kv_frac)")
+    policy: str = _field(
+        "continuous", "--policy", choices=SERVE_POLICIES,
+        surfaces=("serve",),
+        help="admission policy: continuous (admit/evict mid-generation) "
+             "| static (gang-admit a full batch, drain, repeat)")
+    replicas: int = _field(
+        1, "--replicas", parse=int, surfaces=("serve",),
+        help="replica count for multi-replica serving with heartbeat "
+             "failover")
+    stop_token: int | None = _field(
+        None, "--stop-token", parse=parse_opt_int, surfaces=("serve",),
+        help="token id that ends a generation early ('none' = length "
+             "stop only)")
+    deadline: float | None = _field(
+        None, "--deadline", parse=parse_opt_float, surfaces=("serve",),
+        help="per-request completion deadline in modeled seconds from "
+             "arrival; admission rejects and mid-run eviction drops "
+             "LOUDLY past it ('none' = no deadline)")
+    rate: float = _field(
+        50.0, "--rate", parse=float, surfaces=("serve",),
+        help="load-test Poisson arrival rate (requests per modeled "
+             "second)")
+    n_requests: int = _field(
+        32, "--requests", parse=int, surfaces=("serve",),
+        dest="n_requests", help="load-test request count")
+
+    def validate(self) -> None:
+        for f in ("batch", "prompt_len", "gen", "block_size", "replicas",
+                  "n_requests"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"serve {f} must be >= 1, got "
+                                 f"{getattr(self, f)}")
+        for f in ("max_len", "kv_blocks"):
+            v = getattr(self, f)
+            if v is not None and v < 1:
+                raise ValueError(f"serve {f} must be >= 1, got {v}")
+        if self.max_len is not None and self.max_len < self.prompt_len + 1:
+            raise ValueError(
+                f"serve max_len must cover prompt_len + 1 token, got "
+                f"max_len={self.max_len} prompt_len={self.prompt_len}")
+        if self.policy not in SERVE_POLICIES:
+            raise ValueError(f"unknown serve policy {self.policy!r}; "
+                             f"choose from {SERVE_POLICIES}")
+        if not (0.0 < self.kv_frac <= 1.0):
+            raise ValueError(f"serve kv_frac must be in (0, 1], got "
+                             f"{self.kv_frac}")
+        if not (self.rate > 0 and math.isfinite(self.rate)):
+            raise ValueError(f"serve rate must be positive and finite, "
+                             f"got {self.rate}")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError(f"serve deadline must be > 0, got "
+                             f"{self.deadline}")
+
+    def resolved_max_len(self) -> int:
+        """Sequence capacity rounded up to whole paged blocks — the ONE
+        derivation both cache layouts and the load test use."""
+        base = (self.max_len if self.max_len is not None
+                else self.prompt_len + self.gen)
+        bs = self.block_size
+        return ((int(base) + bs - 1) // bs) * bs
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ServeSpec":
+        # pre-serving spec JSONs have no "serve" block: all defaults
+        return cls(**(d or {}))
+
+
+# ---------------------------------------------------------------------------
 # RunSpec — the whole run
 # ---------------------------------------------------------------------------
 
@@ -596,6 +725,7 @@ class RunSpec:
     exchange: ExchangeSpec = _field(factory=ExchangeSpec)
     cluster: ClusterSpec = _field(factory=ClusterSpec)
     watch: WatchSpec = _field(factory=WatchSpec)
+    serve: ServeSpec = _field(factory=ServeSpec)
 
     # -- validation ---------------------------------------------------------
 
@@ -610,6 +740,7 @@ class RunSpec:
         self.exchange.validate()
         self.cluster.validate()
         self.watch.validate()
+        self.serve.validate()
 
     # -- serialization ------------------------------------------------------
 
@@ -626,6 +757,7 @@ class RunSpec:
         d["exchange"] = ExchangeSpec.from_json(d.get("exchange") or {})
         d["cluster"] = ClusterSpec.from_json(d.get("cluster") or {})
         d["watch"] = WatchSpec.from_json(d.get("watch") or {})
+        d["serve"] = ServeSpec.from_json(d.get("serve") or {})
         return cls(**d)
 
     def save(self, path: str) -> None:

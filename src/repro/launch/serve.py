@@ -1,78 +1,138 @@
-"""Serving driver: batched prefill + greedy decode loop.
+"""Serving driver — spec-first (``repro.api.ServeSpec``), engine-backed.
 
-Demonstrates the inference lowering targets (``prefill_fn``/``decode_fn``)
-end-to-end on CPU with a reduced config; on a mesh the same step functions
-run under shard_map exactly as lowered by the dry-run (decode_32k /
-long_500k cells).
+Every knob (batch, prompt/gen lengths, paging, policy, load-test shape)
+lives in ``RunSpec.serve`` with generated CLI flags, so ``--dump-spec``/
+``--spec`` round-trips carry the full serving config (the old raw
+``--batch``/``--prompt-len``/``--gen`` argparse args are these same
+flags, now spec-backed). The old demo's tok/s figure silently included
+XLA compile time; this driver runs a discarded warmup pass and reports
+cold (incl. compile) and steady-state numbers separately.
 
+Modes:
+
+  demo (default)   — submit a batch of identical-shape requests through
+                     the continuous-batching ``ServeEngine`` and print
+                     the generations + both tok/s numbers.
+  --load-test      — replay a seeded Poisson arrival trace (mixed
+                     prompt/gen lengths) through CB and the static-batch
+                     baseline; write TTFT / per-token latency histograms
+                     (p50/p95/p99) + throughput to ``--json`` (default
+                     BENCH_serve.json) with provenance stamping.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --smoke --load-test \
+      --requests 24 --rate 100 --json BENCH_serve.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import ARCHS, SMOKES
+from repro import api
 from repro.models.common import ShardCtx
 from repro.models.flatten import init_flat_params, make_flat_spec
-from repro.models.model import decode_fn, init_cache, prefill_fn
+from repro.serve import Request, ServeEngine
+from repro.serve.loadtest import run_load_test
+from repro.serve.scheduler import serve_fns
+
+
+def build(spec):
+    cfg = spec.arch_config()
+    ctx = ShardCtx(tp=1, tp_axis=None, dtype=jnp.float32)
+    fs = make_flat_spec(cfg, 1)
+    segs = init_flat_params(cfg, jax.random.PRNGKey(spec.seed), 1, fs)
+    return cfg, ctx, fs, segs
+
+
+def _demo(cfg, ctx, fs, segs, spec) -> dict:
+    sv = spec.serve
+    rng = np.random.default_rng(spec.seed + 1)
+    prompts = [tuple(int(x) for x in
+                     rng.integers(1, cfg.vocab_size, sv.prompt_len))
+               for _ in range(sv.batch)]
+    fns = serve_fns(cfg, ctx, fs)
+
+    def gen_all():
+        eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=sv.gen))
+        t0 = time.perf_counter()
+        comps = eng.run()
+        return comps, time.perf_counter() - t0
+
+    # warmup pass pays jit compilation; its timing is reported as "cold"
+    # and its outputs discarded — the measured pass is steady-state only
+    comps, dt_cold = gen_all()
+    comps, dt = gen_all()
+    n_tok = sum(len(c.tokens) for c in comps)
+    tps, tps_cold = n_tok / dt, n_tok / dt_cold
+    print(f"generated {len(comps)}x{sv.gen} tokens: "
+          f"steady {dt:.2f}s ({tps:.1f} tok/s), "
+          f"cold {dt_cold:.2f}s ({tps_cold:.1f} tok/s incl. compile)")
+    for c in comps[:2]:
+        print(f"  sample {c.rid}: {c.tokens}")
+    return {"tokens": [c.tokens for c in comps], "tok_per_s": tps,
+            "tok_per_s_cold": tps_cold}
 
 
 def main(argv=None) -> dict:
-    from repro import api
+    ap = argparse.ArgumentParser(description="serving driver (DESIGN.md §13)")
+    api.add_spec_args(ap, "serve")     # every config flag: repro.api.spec
+    ap.add_argument("--spec", default=None, metavar="SPEC.json",
+                    help="load a repro.api.RunSpec as the base config "
+                         "(explicit flags still override)")
+    ap.add_argument("--dump-spec", default=None, metavar="PATH",
+                    help="write the fully-resolved RunSpec JSON and "
+                         "continue")
+    ap.add_argument("--load-test", action="store_true",
+                    help="replay a Poisson arrival trace through CB + "
+                         "static baseline and write latency histograms")
+    ap.add_argument("--json", default="BENCH_serve.json", metavar="PATH",
+                    help="load-test report path")
+    args = ap.parse_args(argv)
 
-    ap = argparse.ArgumentParser()
-    # --arch/--seed/--smoke(--no-smoke) come from the shared spec table;
-    # the serving base spec defaults to the smoke config (CPU demo)
-    api.add_spec_args(ap, "serve")
-    ap.add_argument("--batch", type=int, default=4,
-                    help="serving batch (not the training global batch)")
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    raw = ap.parse_args(argv)
-    spec = api.apply_args(api.RunSpec(smoke=True), raw, "serve")
-    args = argparse.Namespace(arch=spec.arch, smoke=spec.smoke,
-                              seed=spec.seed, batch=raw.batch,
-                              prompt_len=raw.prompt_len, gen=raw.gen)
+    base = api.RunSpec.load(args.spec) if args.spec \
+        else api.RunSpec(smoke=True)
+    spec = api.apply_args(base, args, "serve")
+    spec.validate()
+    if args.dump_spec:
+        spec.save(args.dump_spec)
+        print(f"wrote resolved spec to {args.dump_spec}")
 
-    cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
-    ctx = ShardCtx(tp=1, tp_axis=None, dtype=jnp.float32)
-    fs = make_flat_spec(cfg, 1)
-    segs = init_flat_params(cfg, jax.random.PRNGKey(args.seed), 1, fs)
+    cfg, ctx, fs, segs = build(spec)
+    sv = spec.serve
+    print(f"arch {cfg.name}: slots={sv.batch} block_size={sv.block_size} "
+          f"max_len={sv.resolved_max_len()} "
+          f"cache={'paged' if sv.paged else 'contiguous'} "
+          f"policy={sv.policy}")
 
-    B, S, T = args.batch, args.prompt_len, args.prompt_len + args.gen
-    key = jax.random.PRNGKey(args.seed + 1)
-    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
-    cross = None
-    if cfg.family == "vlm":
-        cross = 0.02 * jax.random.normal(
-            key, (B, cfg.n_cross_tokens, cfg.d_model), jnp.float32)
+    if not args.load_test:
+        return _demo(cfg, ctx, fs, segs, spec)
 
-    cache = init_cache(cfg, ctx, B, T, jnp.float32)
-    prefill = jax.jit(lambda p, b, c: prefill_fn(cfg, ctx, fs, p, b, c))
-    decode = jax.jit(lambda p, t, kl, c: decode_fn(
-        cfg, ctx, fs, p, t, kl, c, cross_kv=cross))
-
-    t0 = time.time()
-    logits, cache = prefill(segs, {"tokens": prompts, "cross_kv": cross},
-                            cache)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out = [tok]
-    for i in range(args.gen - 1):
-        tok, cache = decode(segs, tok[:, None], jnp.int32(S + i), cache)
-        out.append(tok)
-    gen = jnp.stack(out, axis=1)
-    dt = time.time() - t0
-    tps = B * args.gen / dt
-    print(f"generated {gen.shape} tokens in {dt:.2f}s ({tps:.1f} tok/s)")
-    for b in range(min(B, 2)):
-        print(f"  sample {b}: {gen[b].tolist()}")
-    return {"tokens": gen, "tok_per_s": tps}
+    report = run_load_test(cfg, ctx, fs, segs, spec)
+    with open(args.json, "w") as f:
+        json.dump(report, f, indent=1)
+    c, s = report["continuous"], report["static"]
+    print(f"wrote {args.json}")
+    print(f"  continuous: {c['tokens']} tok in {c['makespan']:.3f}s "
+          f"virtual ({c['throughput_tok_per_s']:.1f} tok/s), "
+          f"TTFT p99 {c['ttft']['p99']:.4f}s, dropped {c['dropped']}")
+    print(f"  static    : {s['tokens']} tok in {s['makespan']:.3f}s "
+          f"virtual ({s['throughput_tok_per_s']:.1f} tok/s)")
+    print(f"  speedup vs static: {report['speedup_vs_static']:.2f}x, "
+          f"tokens match: {report['tokens_match_static']}")
+    print(f"  wall: steady {report['wall']['tok_per_s_steady']:.1f} tok/s, "
+          f"cold {report['wall']['tok_per_s_cold']:.1f} tok/s "
+          f"(incl. compile)")
+    return report
 
 
 if __name__ == "__main__":

@@ -137,7 +137,12 @@ def blockwise_attention(q: Array, k: Array, v: Array, *, causal: bool,
 def decode_attention(q: Array, k_cache: Array, v_cache: Array,
                      kv_len: Array) -> Array:
     """One-token attention against a cache. q: (B,1,Hq,hd);
-    caches: (B,T,Hkv,hd); kv_len: () current valid length (incl. new token).
+    caches: (B,T,Hkv,hd); kv_len: () — or (B,) per-row, for continuous
+    batching where slots sit at different positions — current valid
+    length (incl. new token). Positions >= kv_len are masked to a finite
+    -inf whose softmax weight underflows to exactly 0, so cache contents
+    past the valid length (pad K/V, reused paged blocks) cannot perturb
+    the output bitwise.
     """
     B, S, Hq, hd = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -146,11 +151,35 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     kg = k_cache.transpose(0, 2, 1, 3)                 # (B,Hkv,T,hd)
     vg = v_cache.transpose(0, 2, 1, 3)
     s = jnp.einsum("bgrqd,bgtd->bgrqt", qg, kg).astype(jnp.float32) * hd**-0.5
-    mask = jnp.arange(T)[None, None, None, None, :] < kv_len
+    lens = jnp.asarray(kv_len)
+    if lens.ndim:                                      # per-row valid lengths
+        lens = lens.reshape(B, 1, 1, 1, 1)
+    mask = jnp.arange(T)[None, None, None, None, :] < lens
     s = jnp.where(mask, s, _NEG_INF)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     o = jnp.einsum("bgrqt,bgtd->bgrqd", p, vg)
     return o.reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)
+
+
+def _cache_append(cache: dict, k: Array, v: Array,
+                  kv_len: Array) -> tuple[Array, Array]:
+    """Write this step's K/V at ``kv_len`` into the cache time axis.
+
+    Scalar ``kv_len`` keeps the original whole-batch dynamic-update (the
+    single-position demo path, byte-identical lowering); a (B,) vector
+    writes each row at its own position (continuous batching), via a
+    vmapped per-row dynamic update.
+    """
+    lens = jnp.asarray(kv_len)
+    if lens.ndim:
+        upd = jax.vmap(lambda c, u, i:
+                       jax.lax.dynamic_update_slice_in_dim(c, u, i, 0))
+        return (upd(cache["k"], k.astype(cache["k"].dtype), lens),
+                upd(cache["v"], v.astype(cache["v"].dtype), lens))
+    return (jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), kv_len, 1),
+            jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), kv_len, 1))
 
 
 def attention_block(p: dict, cfg: ArchConfig, ctx: ShardCtx, x: Array,
@@ -200,10 +229,7 @@ def attention_block(p: dict, cfg: ArchConfig, ctx: ShardCtx, x: Array,
                                     kv_pos=kv_pos)
         new_cache = cache  # cross KV is static; pass cache through unchanged
     elif mode == "decode":
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), kv_len, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), kv_len, 1)
+        k_cache, v_cache = _cache_append(cache, k, v, kv_len)
         o = decode_attention(q, k_cache.astype(h.dtype),
                              v_cache.astype(h.dtype), kv_len + S)
         new_cache = {"k": k_cache, "v": v_cache}
@@ -253,10 +279,7 @@ def parallel_attn_mlp_block(p: dict, cfg: ArchConfig, ctx: ShardCtx,
 
     new_cache = None
     if mode == "decode":
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), kv_len, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), kv_len, 1)
+        k_cache, v_cache = _cache_append(cache, k, v, kv_len)
         o = decode_attention(q, k_cache.astype(h.dtype),
                              v_cache.astype(h.dtype), kv_len + S)
         new_cache = {"k": k_cache, "v": v_cache}

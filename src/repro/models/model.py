@@ -386,9 +386,15 @@ def decode_fn(cfg: ArchConfig, ctx: ShardCtx, fs: FlatSpec, segs: dict,
               cross_kv: Array | None = None,
               gathers: Gathers = None) -> tuple[Array, Any]:
     """One decode step: tokens (B, 1) at position ``kv_len`` -> (next-token
-    ids (B,), updated cache)."""
+    ids (B,), updated cache).
+
+    ``kv_len`` is the valid cache length BEFORE this token: a () scalar
+    (whole batch at one position — the original demo path) or a (B,)
+    vector (each row at its own position — continuous batching).
+    """
     B, S = tokens.shape
-    pos = jnp.broadcast_to(kv_len.astype(jnp.int32), (B, S))
+    kl = jnp.asarray(kv_len).astype(jnp.int32)
+    pos = jnp.broadcast_to(kl[:, None] if kl.ndim else kl, (B, S))
     hid, _, cache, top = _backbone(cfg, ctx, fs, segs, tokens, pos, "decode",
                                    cross_kv=cross_kv, cache=cache,
                                    kv_len=kv_len, gathers=gathers)
@@ -441,3 +447,27 @@ def cache_shapes(cfg: ArchConfig, ctx: ShardCtx, b_loc: int, t_cache: int,
     """ShapeDtypeStruct pytree of the cache (dry-run stand-in, no alloc)."""
     return jax.eval_shape(
         functools.partial(init_cache, cfg, ctx, b_loc, t_cache, dtype))
+
+
+# Cache kinds whose leaves carry a time axis (axis 3 of the stacked
+# (n, cnt, B, T, nkv, hd) layout) and are therefore pageable; rwkv/mamba
+# kinds hold fixed-size recurrent state with batch axis 2 and no time axis.
+KV_CACHE_KINDS = ("attn", "moe", "shared_attn")
+
+
+def split_cache(cache: dict) -> tuple[dict, dict]:
+    """Split a cache pytree into (kv_kinds, state_kinds) sub-dicts.
+
+    The serve layer pages only the KV kinds; state kinds stay dense
+    per-slot. Both returned dicts share leaves with the input (no copy).
+    """
+    kv = {k: v for k, v in cache.items() if k in KV_CACHE_KINDS}
+    state = {k: v for k, v in cache.items() if k not in KV_CACHE_KINDS}
+    return kv, state
+
+
+def merge_cache(kv: dict, state: dict) -> dict:
+    """Inverse of :func:`split_cache`."""
+    out = dict(kv)
+    out.update(state)
+    return out

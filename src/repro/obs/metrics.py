@@ -66,11 +66,12 @@ class Histogram:
             # full key set, all null: exported JSON stays schema-stable and
             # NaN/ZeroDivision-free when an instrument never observed
             return {"count": 0, "mean": None, "min": None, "max": None,
-                    "p50": None, "p90": None, "p99": None}
+                    "p50": None, "p90": None, "p95": None, "p99": None}
         q = lambda p: v[min(len(v) - 1, int(math.ceil(p * len(v))) - 1)]  # noqa: E731
         return {"count": len(v), "mean": sum(v) / len(v),
                 "min": v[0], "max": v[-1],
-                "p50": q(0.50), "p90": q(0.90), "p99": q(0.99)}
+                "p50": q(0.50), "p90": q(0.90), "p95": q(0.95),
+                "p99": q(0.99)}
 
     def to_json(self):
         return self.summary()

@@ -1,0 +1,21 @@
+"""repro.serve — continuous-batching serving engine (DESIGN.md §13).
+
+Layers:
+
+    kvcache   — paged / contiguous KV-cache backends over the model's
+                ``init_cache`` pytree (free-list allocator, block tables)
+    scheduler — continuous-batching engine: admit/evict mid-generation,
+                deadline-aware admission priced by the cluster cost model
+    streaming — per-request token generators + stop conditions
+    replica   — multi-replica serving with heartbeat-driven failover
+
+The engine is model-agnostic: anything exposing ``prefill_fn`` /
+``decode_fn`` / ``init_cache`` (models/model.py) serves unchanged.
+"""
+
+from repro.serve.kvcache import (ContiguousKVCache, OutOfBlocks,  # noqa: F401
+                                 PagedKVCache)
+from repro.serve.scheduler import (Completion, Request,  # noqa: F401
+                                   ServeEngine)
+from repro.serve.streaming import stream_tokens  # noqa: F401
+from repro.serve.replica import ReplicaSet  # noqa: F401

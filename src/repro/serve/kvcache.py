@@ -1,0 +1,276 @@
+"""Paged and contiguous KV-cache backends for the serving engine.
+
+Both backends manage the cache pytree of ``models.init_cache`` for a
+fixed number of batch *slots* and expose one interface to the scheduler:
+
+    ensure(slot, length)   — make positions [0, length) addressable
+    write_prefill(slot, cache, length)  — install a B=1 prefill cache
+    gather()               — contiguous (slots, T) view for decode_fn
+    scatter(cache, kv_len, active)      — write back one decode step
+    free(slot)             — release the slot's storage
+
+``PagedKVCache`` stores KV in fixed-size blocks: each pool leaf is
+(n, cnt, num_blocks, block_size, nkv, hd) and a logical block spans ALL
+cycles/kinds at once (one shared block table + free list, physical index
+reused in every kind's pool). ``gather`` assembles the per-slot block
+lists into the contiguous layout decode expects; ``scatter`` writes back
+only the block containing the position each row just wrote.
+
+Bit-exactness (pinned in tests/test_serve.py): the gathered view equals
+the true contiguous cache on every VALID position; positions >= kv_len
+may differ (stale blocks vs stale dense rows) but ``decode_attention``
+masks them with a finite -1e30 whose exp underflows to exactly 0.0, so
+they cannot perturb the output bitwise.
+
+Recurrent state kinds (rwkv/mamba — no time axis) are dense per-slot in
+both backends; paging only applies to the KV kinds (``KV_CACHE_KINDS``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.common import ArchConfig, ShardCtx
+
+Array = jax.Array
+
+_GiB = 1024 ** 3
+
+
+class OutOfBlocks(RuntimeError):
+    """Free list exhausted — the scheduler must evict or queue."""
+
+
+def _leaf_list(tree: Any) -> list:
+    return jax.tree_util.tree_leaves(tree)
+
+
+class _CacheBase:
+    """Shared slot/length bookkeeping + dense recurrent-state handling."""
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx, *, slots: int,
+                 block_size: int, max_len: int, dtype=jnp.bfloat16):
+        assert max_len % block_size == 0, (max_len, block_size)
+        self.cfg, self.ctx = cfg, ctx
+        self.slots = slots
+        self.block_size = block_size
+        self.max_len = max_len
+        self.max_blocks = max_len // block_size
+        self.dtype = dtype
+        self.lengths = np.zeros(slots, np.int64)  # addressable positions
+        full = M.init_cache(cfg, ctx, slots, max_len, dtype)
+        kv, state = M.split_cache(full)
+        self._kv_shape = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), kv)
+        self.state = state  # dense (n, cnt, slots, ...) leaves, batch ax 2
+
+    def blocks_for(self, length: int) -> int:
+        return -(-length // self.block_size)
+
+    def _check_len(self, length: int) -> None:
+        if length > self.max_len:
+            raise OutOfBlocks(
+                f"request length {length} exceeds cache max_len "
+                f"{self.max_len}")
+
+    def _write_state(self, slot: int, state_b1: dict) -> None:
+        """Install a B=1 prefill state (or zeros) at ``slot`` (axis 2)."""
+        self.state = jax.tree_util.tree_map(
+            lambda dense, s1: dense.at[:, :, slot].set(
+                s1[:, :, 0].astype(dense.dtype)),
+            self.state, state_b1)
+
+    def _zero_state(self, slot: int) -> None:
+        self.state = jax.tree_util.tree_map(
+            lambda dense: dense.at[:, :, slot].set(0), self.state)
+
+
+class ContiguousKVCache(_CacheBase):
+    """Dense reference backend: one (slots, max_len) cache, no paging.
+
+    ``gather`` is the identity; ``scatter`` stores the step's cache back
+    wholesale. Exists to pin the paged backend bit-exact and as the
+    static-batch baseline's storage.
+    """
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx, *, slots: int,
+                 block_size: int, max_len: int, dtype=jnp.bfloat16):
+        super().__init__(cfg, ctx, slots=slots, block_size=block_size,
+                         max_len=max_len, dtype=dtype)
+        full = M.init_cache(cfg, ctx, slots, max_len, dtype)
+        self.kv, _ = M.split_cache(full)
+
+    @property
+    def free_blocks(self) -> int:  # parity with PagedKVCache invariants
+        return self.slots * self.max_blocks - sum(
+            self.blocks_for(int(n)) for n in self.lengths)
+
+    def ensure(self, slot: int, length: int) -> None:
+        self._check_len(length)
+        self.lengths[slot] = max(self.lengths[slot], length)
+
+    def free(self, slot: int) -> None:
+        self.lengths[slot] = 0
+
+    def write_prefill(self, slot: int, cache_b1: dict, length: int) -> None:
+        self.ensure(slot, length)
+        kv1, st1 = M.split_cache(cache_b1)
+        if length:
+            self.kv = jax.tree_util.tree_map(
+                lambda dense, c1: dense.at[:, :, slot, :length].set(
+                    c1[:, :, 0, :length].astype(dense.dtype)),
+                self.kv, kv1)
+        self._write_state(slot, st1)
+
+    def gather(self) -> dict:
+        return M.merge_cache(self.kv, self.state)
+
+    def scatter(self, cache: dict, kv_len: np.ndarray,
+                active: np.ndarray) -> None:
+        self.kv, self.state = M.split_cache(cache)
+
+
+class PagedKVCache(_CacheBase):
+    """Block-pooled KV storage with a free-list allocator.
+
+    Physical block 0 is reserved and always zero — unallocated block-table
+    entries gather from it, so the assembled view never reads stale pool
+    memory outside a slot's own blocks.
+    """
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx, *, slots: int,
+                 block_size: int, max_len: int, num_blocks: int,
+                 dtype=jnp.bfloat16):
+        super().__init__(cfg, ctx, slots=slots, block_size=block_size,
+                         max_len=max_len, dtype=dtype)
+        if num_blocks < 2:
+            raise ValueError(f"num_blocks must be >= 2, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.pool = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(
+                (s.shape[0], s.shape[1], num_blocks, self.block_size)
+                + s.shape[4:], s.dtype),
+            self._kv_shape)
+        # block 0 reserved (always zero); LIFO free list for locality
+        self._free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self.tables = np.full((slots, self.max_blocks), -1, np.int32)
+
+    # -- sizing ------------------------------------------------------------
+
+    @staticmethod
+    def block_bytes(cfg: ArchConfig, ctx: ShardCtx, block_size: int,
+                    dtype=jnp.bfloat16) -> int:
+        """Bytes one logical block occupies across ALL kinds' pools."""
+        kv, _ = M.split_cache(
+            M.cache_shapes(cfg, ctx, 1, block_size, dtype))
+        return sum(l.size * l.dtype.itemsize for l in _leaf_list(kv))
+
+    @classmethod
+    def from_cluster(cls, cfg: ArchConfig, ctx: ShardCtx, cluster,
+                     serve, dtype=jnp.bfloat16) -> "PagedKVCache":
+        """Size the pool from ``ClusterSpec.mem_gb * ServeSpec.kv_frac``
+        (or the explicit ``kv_blocks`` override), capped at the most the
+        slot set can ever address (slots * max_blocks + zero block)."""
+        max_len = serve.resolved_max_len()
+        cap = serve.batch * (max_len // serve.block_size) + 1
+        if serve.kv_blocks is not None:
+            n = serve.kv_blocks
+        else:
+            per_block = cls.block_bytes(cfg, ctx, serve.block_size, dtype)
+            budget = int(cluster.mem_gb * serve.kv_frac * _GiB)
+            n = cap if per_block == 0 else budget // per_block
+        return cls(cfg, ctx, slots=serve.batch, block_size=serve.block_size,
+                   max_len=max_len, num_blocks=max(2, min(int(n), cap)),
+                   dtype=dtype)
+
+    # -- allocator ---------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def used_blocks(self, slot: int) -> int:
+        return int((self.tables[slot] >= 0).sum())
+
+    def ensure(self, slot: int, length: int) -> None:
+        self._check_len(length)
+        have = self.used_blocks(slot)
+        need = self.blocks_for(length) - have
+        if need > len(self._free):
+            raise OutOfBlocks(
+                f"need {need} blocks for slot {slot}, "
+                f"{len(self._free)} free")
+        for j in range(have, have + need):
+            self.tables[slot, j] = self._free.pop()
+        self.lengths[slot] = max(self.lengths[slot], length)
+
+    def free(self, slot: int) -> None:
+        phys = self.tables[slot]
+        self._free.extend(int(p) for p in phys[phys >= 0])
+        self.tables[slot] = -1
+        self.lengths[slot] = 0
+
+    # -- data movement -----------------------------------------------------
+
+    def write_prefill(self, slot: int, cache_b1: dict, length: int) -> None:
+        """Install a B=1 prefill cache: KV leaves are (n, cnt, 1, P, ...)
+        with P a whole number of blocks <= max_len; positions beyond
+        ``length`` in the last block are prefill padding (masked later)."""
+        kv1, st1 = M.split_cache(cache_b1)
+        if length and _leaf_list(kv1):  # pure-SSM archs have no KV kinds
+            P = _leaf_list(kv1)[0].shape[3]
+            assert P % self.block_size == 0 and length <= P, (length, P)
+            self.ensure(slot, P)
+            nb = P // self.block_size
+            phys = jnp.asarray(self.tables[slot, :nb])
+            self.pool = jax.tree_util.tree_map(
+                lambda pool, c1: pool.at[:, :, phys].set(
+                    c1[:, :, 0].reshape(
+                        c1.shape[:2] + (nb, self.block_size) + c1.shape[4:]
+                    ).astype(pool.dtype)),
+                self.pool, kv1)
+            self.lengths[slot] = length
+        self._write_state(slot, st1)
+
+    def gather(self) -> dict:
+        """Assemble the contiguous (slots, max_len) view decode expects.
+
+        Unallocated table entries read physical block 0 (always zero)."""
+        tbl = jnp.asarray(np.where(self.tables < 0, 0, self.tables))
+
+        def asm(pool):
+            v = jnp.take(pool, tbl, axis=2)  # (n,cnt,slots,maxb,bs,...)
+            return v.reshape(v.shape[:3] + (self.max_len,) + v.shape[5:])
+
+        return M.merge_cache(
+            jax.tree_util.tree_map(asm, self.pool), self.state)
+
+    def scatter(self, cache: dict, kv_len: np.ndarray,
+                active: np.ndarray) -> None:
+        """Write back ONE decode step: row i of ``cache`` wrote position
+        ``kv_len[i]``; copy just that position into its block. Inactive
+        rows scatter to physical index ``num_blocks`` -> dropped."""
+        kv, self.state = M.split_cache(cache)
+        kv_len = np.asarray(kv_len)
+        blk, off = kv_len // self.block_size, kv_len % self.block_size
+        phys = np.where(active, self.tables[np.arange(self.slots), blk],
+                        self.num_blocks).astype(np.int32)
+        assert ((phys >= 0) | ~active).all(), "write to unallocated block"
+        pj, oj = jnp.asarray(phys), jnp.asarray(off)
+
+        def put(pool, leaf):
+            # per-row slice at its own time index -> (n,cnt,slots,...)
+            row = jax.vmap(
+                lambda a, i: jax.lax.dynamic_index_in_dim(
+                    a, i, axis=2, keepdims=False),
+                in_axes=(2, 0), out_axes=2)(leaf, jnp.asarray(kv_len))
+            return pool.at[:, :, pj, oj].set(
+                row.astype(pool.dtype), mode="drop")
+
+        self.pool = jax.tree_util.tree_map(put, self.pool, kv)

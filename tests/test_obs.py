@@ -154,7 +154,7 @@ def test_metrics_registry_and_histogram():
     # by a zero count
     empty = obs.Metrics().histogram("e").summary()
     assert empty == {"count": 0, "mean": None, "min": None, "max": None,
-                     "p50": None, "p90": None, "p99": None}
+                     "p50": None, "p90": None, "p95": None, "p99": None}
     snap = obs.Metrics()
     snap.histogram("never")            # instrument exists, no samples
     s = snap.snapshot()

@@ -1,0 +1,414 @@
+"""repro.serve: paged-cache bit-exactness, scheduler invariants,
+streaming, replica failover, ServeSpec round-trips, load-test
+determinism + the CB-beats-static acceptance bound (DESIGN.md §13)."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import SMOKES
+from repro.models.common import ShardCtx
+from repro.models.flatten import init_flat_params, make_flat_spec
+from repro.models import model as M
+from repro.serve import (ContiguousKVCache, OutOfBlocks, PagedKVCache,
+                         ReplicaSet, Request, ServeEngine, stream_tokens)
+from repro.serve.loadtest import make_trace, run_load_test
+from repro.serve.scheduler import predict_admission, serve_fns
+
+
+def _build(arch):
+    cfg = SMOKES[arch]
+    ctx = ShardCtx(tp=1, tp_axis=None, dtype=jnp.float32)
+    fs = make_flat_spec(cfg, 1)
+    segs = init_flat_params(cfg, jax.random.PRNGKey(0), 1, fs)
+    return cfg, ctx, fs, segs
+
+
+_BUILT: dict = {}
+_FNS: dict = {}
+
+
+def built(arch):
+    if arch not in _BUILT:
+        _BUILT[arch] = _build(arch)
+        _FNS[arch] = serve_fns(*_BUILT[arch][:3])
+    return _BUILT[arch] + (_FNS[arch],)
+
+
+def _spec(**kw):
+    base = api.RunSpec(smoke=True)
+    sv = dataclasses.replace(base.serve, **kw)
+    spec = dataclasses.replace(base, serve=sv)
+    spec.validate()
+    return spec
+
+
+def _requests(cfg, n, *, seed=0, prompt_hi=8, max_new=4, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=tuple(int(x) for x in rng.integers(
+                        1, cfg.vocab_size, int(rng.integers(1, prompt_hi)))),
+                    max_new=max_new, **kw)
+            for i in range(n)]
+
+
+# -- paged vs contiguous: bit-exact across cycle families -------------------
+
+
+# attn (qwen3), mamba+shared_attn hybrid (zamba2), pure-rwkv (no KV kinds)
+@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-2.7b", "rwkv6-7b"])
+def test_paged_bitexact_vs_contiguous(arch):
+    """Lockstep the two backends: every step's emissions must match and
+    the paged gather must equal the contiguous cache BITWISE on every
+    valid position of every active slot."""
+    cfg, ctx, fs, segs, fns = built(arch)
+    spec = _spec(batch=3, block_size=4, max_len=16, prompt_len=8, gen=4)
+    reqs = _requests(cfg, 6, seed=1)
+
+    def engine(paged):
+        sp = dataclasses.replace(
+            spec, serve=dataclasses.replace(spec.serve, paged=paged))
+        eng = ServeEngine(cfg, ctx, fs, segs, sp, fns=fns)
+        for r in reqs:
+            eng.submit(dataclasses.replace(r))
+        return eng
+
+    ep, ec = engine(True), engine(False)
+    steps = 0
+    while ep.pending() or ec.pending():
+        assert ep.step() == ec.step()   # same (rid, token) emissions
+        steps += 1
+        assert steps < 1000
+        gp = ep.cache.gather()
+        gc = ec.cache.gather()
+        kvp, stp = M.split_cache(gp)
+        kvc, stc = M.split_cache(gc)
+        for i, s in enumerate(ep.slots):
+            if s is None:
+                continue
+            for lp, lc in zip(jax.tree_util.tree_leaves(kvp),
+                              jax.tree_util.tree_leaves(kvc)):
+                a = np.asarray(lp[:, :, i, :s.pos])
+                b = np.asarray(lc[:, :, i, :s.pos])
+                assert (a == b).all()   # bit-exact valid region
+            for lp, lc in zip(jax.tree_util.tree_leaves(stp),
+                              jax.tree_util.tree_leaves(stc)):
+                assert (np.asarray(lp[:, :, i])
+                        == np.asarray(lc[:, :, i])).all()
+    a = {c.rid: c.tokens for c in ep.run()}
+    b = {c.rid: c.tokens for c in ec.run()}
+    assert a == b and len(a) == len(reqs)
+
+
+def test_continuous_matches_sequential_reference():
+    """Continuous batching is a scheduling change only: each request's
+    greedy tokens equal a one-request-at-a-time reference run."""
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=3, block_size=4, max_len=16, prompt_len=8, gen=4)
+    reqs = _requests(cfg, 5, seed=3)
+    eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    for r in reqs:
+        eng.submit(dataclasses.replace(r))
+    batched = {c.rid: c.tokens for c in eng.run()}
+    for r in reqs:
+        solo = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+        solo.submit(dataclasses.replace(r))
+        [c] = solo.run()
+        assert batched[r.rid] == c.tokens
+
+
+# -- allocator / scheduler invariants ---------------------------------------
+
+
+def test_block_accounting_no_leaks():
+    """Blocks are conserved at every step and fully returned on drain."""
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=2, block_size=4, max_len=16, prompt_len=8, gen=4)
+    eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    cache = eng.cache
+    assert isinstance(cache, PagedKVCache)
+    total = cache.num_blocks - 1            # block 0 reserved
+    for r in _requests(cfg, 5, seed=5):
+        eng.submit(r)
+    steps = 0
+    while eng.pending():
+        eng.step()
+        steps += 1
+        assert steps < 1000
+        used = sum(cache.used_blocks(i) for i in range(cache.slots))
+        assert used + cache.free_blocks == total
+        for i, s in enumerate(eng.slots):   # no slot leaks either way
+            if s is None:
+                assert cache.used_blocks(i) == 0
+            else:
+                assert cache.used_blocks(i) >= cache.blocks_for(s.pos)
+    assert cache.free_blocks == total
+    assert all(s is None for s in eng.slots)
+
+
+def test_preemption_replays_and_frees_blocks():
+    """A pool too small for the full batch forces eviction; evicted
+    requests replay from prompt+emitted and still finish with the same
+    tokens an unconstrained run produces."""
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    free = _spec(batch=3, block_size=4, max_len=16, prompt_len=8, gen=8)
+    # three 7-token prompts: each prefills 2 blocks (P=6 padded to 8) and
+    # crosses into a 3rd block at position 8 — with 7 usable blocks only
+    # one can grow, so the other two hit OutOfBlocks together
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=i,
+                    prompt=tuple(int(x) for x in
+                                 rng.integers(1, cfg.vocab_size, 7)),
+                    max_new=8) for i in range(3)]
+
+    def run(spec):
+        eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+        for r in reqs:
+            eng.submit(dataclasses.replace(r))
+        return eng, eng.run()
+
+    _, want = run(free)
+    tight = _spec(batch=3, block_size=4, max_len=16, prompt_len=8, gen=8,
+                  kv_blocks=8)            # 7 usable blocks for 3 slots
+    eng, got = run(tight)
+    assert {c.rid: c.tokens for c in got} == {c.rid: c.tokens
+                                             for c in want}
+    assert any(c.replays > 0 for c in got)      # eviction actually fired
+    assert eng.cache.free_blocks == eng.cache.num_blocks - 1
+
+
+def test_oversized_request_drops_loudly(capsys):
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=2, block_size=4, max_len=8, prompt_len=4, gen=4)
+    eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    eng.submit(Request(rid=0, prompt=(1,) * 20, max_new=4))
+    [c] = eng.run()
+    assert c.finish == "dropped" and c.reason == "too_long"
+    assert "DROP" in capsys.readouterr().err
+
+
+def test_deadline_admission_drops_hopeless_request():
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=2, block_size=4, max_len=16, prompt_len=8, gen=4)
+    est = predict_admission(spec, 7, 4)
+    eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    eng.submit(Request(rid=0, prompt=(1,) * 8, max_new=4,
+                       deadline=est["t_total"] / 2))   # cannot make it
+    eng.submit(Request(rid=1, prompt=(1,) * 8, max_new=4,
+                       deadline=est["t_total"] * 50))
+    done = {c.rid: c for c in eng.run()}
+    assert done[0].finish == "dropped" and done[0].reason == "deadline"
+    assert done[1].finish == "length"
+
+
+def test_static_policy_gang_admits():
+    """Static baseline never refills a freed slot mid-batch."""
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=2, block_size=4, max_len=16, prompt_len=8, gen=6,
+                 policy="static")
+    # unequal lengths: slot draining first must stay idle under static
+    reqs = [Request(rid=0, prompt=(3, 4, 5), max_new=2),
+            Request(rid=1, prompt=(6, 7, 8), max_new=6),
+            Request(rid=2, prompt=(9, 10, 11), max_new=2)]
+    eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    for r in reqs:
+        eng.submit(r)
+    saw_idle_slot_with_queue = False
+    steps = 0
+    while eng.pending():
+        eng.step()
+        steps += 1
+        assert steps < 1000
+        if eng.queue and eng.active() and eng.active() < len(
+                [s for s in eng.slots]):
+            saw_idle_slot_with_queue = True
+    assert saw_idle_slot_with_queue
+    assert len(eng.completions) == 3
+
+
+# -- streaming --------------------------------------------------------------
+
+
+def test_stream_tokens_and_stop_token():
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=2, block_size=4, max_len=16, prompt_len=8, gen=8)
+    eng = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    req = Request(rid=0, prompt=(5, 6, 7, 8), max_new=8)
+    got = list(stream_tokens(eng, req))
+    comp = eng.completion(0)
+    assert got == comp.tokens and comp.finish == "length"
+    # whatever token the model emits first, using it as the stop token
+    # must terminate generation at length 1 with finish='stop'
+    eng2 = ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+    eng2.submit(Request(rid=1, prompt=(5, 6, 7, 8), max_new=8,
+                        stop_token=got[0]))
+    [c] = eng2.run()
+    assert c.finish == "stop" and c.tokens == [got[0]]
+
+
+# -- replica failover -------------------------------------------------------
+
+
+def test_replica_failover_replays_identically():
+    """Kill a replica mid-generation: heartbeat detects it, replan
+    re-routes, and every request's tokens equal the uninterrupted run
+    (greedy decode). Late requests past deadline drop loudly instead."""
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=2, block_size=4, max_len=24, prompt_len=8, gen=8)
+    reqs = _requests(cfg, 6, seed=11, prompt_hi=7, max_new=6)
+
+    def engines(n):
+        return [ServeEngine(cfg, ctx, fs, segs, spec, fns=fns)
+                for _ in range(n)]
+
+    ref = ReplicaSet(engines(1))
+    for r in reqs:
+        ref.submit(dataclasses.replace(r))
+    want = {c.rid: c.tokens for c in ref.run()}
+
+    rs = ReplicaSet(engines(2), heartbeat_timeout=1.5)
+    for r in reqs:
+        rs.submit(dataclasses.replace(r))
+    for _ in range(3):
+        rs.step_round()
+    rs.kill(1)
+    got = rs.run()
+    assert {c.rid: c.tokens for c in got} == want
+    assert rs.plan.generation == 1          # elastic replan happened
+    assert 1 not in rs.live()
+    assert any(c.replays > 0 for c in got)  # in-flight work was replayed
+
+
+def test_replica_failover_deadline_drop():
+    cfg, ctx, fs, segs, fns = built("qwen3-4b")
+    spec = _spec(batch=1, block_size=4, max_len=24, prompt_len=8, gen=8)
+    rs = ReplicaSet(
+        [ServeEngine(cfg, ctx, fs, segs, spec, fns=fns) for _ in range(2)],
+        heartbeat_timeout=1.5)
+    # routed round-robin: rid 0 -> replica 0, rid 1 -> replica 1; give the
+    # doomed replica's request a deadline that is already unmeetable by
+    # the time the failure is detected
+    rs.submit(Request(rid=0, prompt=(1, 2, 3), max_new=6))
+    rs.submit(Request(rid=1, prompt=(4, 5, 6), max_new=6, deadline=1e-9))
+    rs.step_round()
+    rs.kill(1)
+    done = {c.rid: c for c in rs.run()}
+    assert done[1].finish == "dropped" and done[1].reason == "deadline"
+    assert done[0].finish == "length"
+
+
+# -- spec + CLI surface -----------------------------------------------------
+
+
+def test_servespec_json_roundtrip():
+    spec = _spec(batch=7, block_size=16, max_len=64, prompt_len=20, gen=12,
+                 paged=False, policy="static", kv_blocks=33,
+                 deadline=2.5, rate=10.0, n_requests=9, stop_token=3)
+    d = json.loads(json.dumps(spec.to_json()))
+    back = api.RunSpec.from_json(d)
+    assert back.serve == spec.serve
+    assert back == spec
+
+
+def test_serve_flags_fold_into_spec():
+    """--batch/--prompt-len/--gen are spec-backed on the serve surface
+    (the PR 5 single-source-of-truth invariant) and round-trip through
+    dump-spec -> --spec."""
+    ap = api.build_parser("serve")
+    ns = ap.parse_args(["--batch", "9", "--prompt-len", "17", "--gen",
+                        "5", "--no-paged", "--policy", "static",
+                        "--kv-frac", "0.25"])
+    spec = api.apply_args(api.RunSpec(smoke=True), ns, "serve")
+    sv = spec.serve
+    assert (sv.batch, sv.prompt_len, sv.gen) == (9, 17, 5)
+    assert sv.paged is False and sv.policy == "static"
+    assert sv.kv_frac == 0.25
+    # round-trip: the resolved spec re-loads identically
+    assert api.RunSpec.from_json(spec.to_json()) == spec
+    # train surface must NOT grow serve-only flags
+    tp = api.build_parser("train")
+    with pytest.raises(SystemExit):
+        tp.parse_args(["--prompt-len", "17"])
+
+
+def test_resolved_max_len_rounds_to_blocks():
+    sv = _spec(prompt_len=10, gen=5, block_size=8, max_len=None).serve
+    assert sv.resolved_max_len() == 16        # ceil(15 / 8) * 8
+    sv = _spec(prompt_len=10, gen=6, block_size=8, max_len=24).serve
+    assert sv.resolved_max_len() == 24
+
+
+def test_paged_pool_sized_from_cluster_memory():
+    cfg, ctx, _, _, _ = built("qwen3-4b")
+    sv = _spec(batch=2, block_size=4, max_len=16, prompt_len=8,
+               gen=8).serve
+    per = PagedKVCache.block_bytes(cfg, ctx, sv.block_size, jnp.float32)
+    assert per > 0
+    cl = dataclasses.replace(api.ClusterSpec(), mem_gb=per * 10 / 0.5
+                             / (1024 ** 3))
+    cache = PagedKVCache.from_cluster(cfg, ctx, cl, sv, jnp.float32)
+    assert cache.num_blocks == min(10, 2 * 4 + 1)
+    # kv_blocks overrides the memory-derived size
+    sv2 = dataclasses.replace(sv, kv_blocks=5)
+    assert PagedKVCache.from_cluster(
+        cfg, ctx, cl, sv2, jnp.float32).num_blocks == 5
+
+
+def test_contiguous_rejects_overflow():
+    cfg, ctx, _, _, _ = built("qwen3-4b")
+    cache = ContiguousKVCache(cfg, ctx, slots=2, block_size=4, max_len=8,
+                              dtype=jnp.float32)
+    with pytest.raises(OutOfBlocks):
+        cache.ensure(0, 9)
+
+
+# -- load test --------------------------------------------------------------
+
+
+def _strip_wall(report):
+    d = json.loads(json.dumps(report))
+    d.pop("wall")
+    d.pop("provenance")
+    for pol in ("continuous", "static"):
+        d[pol].pop("wall_s")
+        d[pol].pop("per_token_wall")
+    return d
+
+
+def test_load_test_deterministic_and_cb_beats_static():
+    cfg, ctx, fs, segs, _ = built("qwen3-4b")
+    spec = _spec(batch=3, block_size=4, max_len=16, prompt_len=8, gen=6,
+                 rate=300.0, n_requests=10)
+    r1 = run_load_test(cfg, ctx, fs, segs, spec)
+    r2 = run_load_test(cfg, ctx, fs, segs, spec)
+    # virtual-clock metrics are a pure function of (spec, seed)
+    assert _strip_wall(r1) == _strip_wall(r2)
+    # acceptance: CB throughput beats the static baseline on this trace,
+    # nothing drops, scheduling does not change tokens
+    assert r1["speedup_vs_static"] > 1.0
+    assert (r1["continuous"]["throughput_tok_per_s"]
+            > r1["static"]["throughput_tok_per_s"])
+    assert r1["continuous"]["dropped"] == 0
+    assert r1["tokens_match_static"]
+    h = r1["continuous"]["ttft"]
+    assert h["count"] == 10 and h["p50"] <= h["p95"] <= h["p99"]
+
+
+def test_trace_is_seeded_and_fits_cache():
+    sv = _spec(batch=2, block_size=4, max_len=16, prompt_len=8, gen=6,
+               n_requests=20, rate=50.0, deadline=1.0).serve
+    a = make_trace(sv, 256, seed=4)
+    b = make_trace(sv, 256, seed=4)
+    assert [(r.prompt, r.max_new, r.arrival) for r in a] == \
+           [(r.prompt, r.max_new, r.arrival) for r in b]
+    arr = 0.0
+    for r in a:
+        assert len(r.prompt) - 1 + r.max_new <= sv.resolved_max_len()
+        assert r.arrival > arr
+        arr = r.arrival
+        assert r.deadline == pytest.approx(r.arrival + 1.0)
